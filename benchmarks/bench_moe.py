@@ -1,0 +1,34 @@
+"""Model-side DMM: MoE dispatch implementations A/B (smoke scale).
+
+The MoE dispatch operator is the paper's mapping matrix alive in the model
+(DESIGN §2).  Compares the dense scatter dispatch against the compacted
+index-set ('dmm') dispatch and, per-token, the step cost of each smoke MoE
+arch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.models import moe as MOE
+
+from common import bench
+
+
+def run() -> list:
+    rows = []
+    for arch in ("qwen3_moe_30b_a3b", "dbrx_132b"):
+        cfg0 = C.get_smoke(arch)
+        p = MOE.moe_params(jax.random.PRNGKey(0), cfg0)
+        x = (jax.random.normal(jax.random.PRNGKey(1), (8, 64, cfg0.d_model)) * 0.5).astype(
+            cfg0.cdtype
+        )
+        T = 8 * 64
+        for impl in ("dense", "dmm"):
+            cfg = cfg0.replace(moe_impl=impl)
+            f = jax.jit(lambda p_, x_: MOE.moe_apply(p_, x_, cfg)[0])
+            us = bench(f, p, x)
+            rows.append((f"moe/{arch}_{impl}", us, f"{us/T:.3f} us/token E={cfg.n_experts} k={cfg.top_k}"))
+    return rows

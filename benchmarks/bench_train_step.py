@@ -1,0 +1,43 @@
+"""Smoke-scale train/decode step timing per architecture family.
+
+Not a TPU number (CPU container) -- tracks relative regressions and feeds
+the us/token 'derived' column.  Real per-step analysis is the dry-run
+roofline (EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.etl.batcher import make_token_batch
+from repro.models import model as M
+from repro.train.loop import TrainConfig, make_train_step
+from repro.train.optimizer import AdamWConfig, adamw_init
+
+from common import bench
+
+ARCHS = ["olmo_1b", "rwkv6_3b", "hymba_1_5b", "qwen3_moe_30b_a3b", "whisper_tiny"]
+
+
+def run() -> list:
+    rows = []
+    for arch in ARCHS:
+        cfg = C.get_smoke(arch)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        tc = TrainConfig(batch=4, seq=32, opt=AdamWConfig())
+        opt = adamw_init(params, tc.opt)
+        batch = {k: jnp.asarray(v) for k, v in make_token_batch(cfg, 4, 32).items()}
+        step = jax.jit(make_train_step(cfg, tc))
+        us = bench(step, params, opt, batch, warmup=2, iters=5)
+        rows.append((f"train_step/{arch}", us, f"{us/(4*32):.2f} us/token smoke"))
+
+        state = M.init_decode_state(cfg, 4, 64)
+        if cfg.enc_dec:
+            state = M.prefill_memory(params, cfg, batch["frames"], state)
+        tok = batch["tokens"][:, 0]
+        dstep = jax.jit(lambda p, s, t: M.decode_step(p, cfg, s, t))
+        us = bench(dstep, params, state, tok, warmup=2, iters=5)
+        rows.append((f"decode_step/{arch}", us, f"{us/4:.2f} us/token smoke"))
+    return rows

@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
+
+    bench_compaction   Figure 5 + §5.2/§5.3 compaction claims (>99%, >99.9%)
+    bench_mapping      §7 evaluation (per-event latency; Alg.1 vs Alg.6 A/B)
+    bench_update       §3.5/§5.4 update cost (~100k elements per version add)
+    bench_moe          model-side DMM (MoE dispatch impls A/B)
+    bench_train_step   per-family step cost regression tracker
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+MODULES = [
+    "bench_compaction",
+    "bench_mapping",
+    "bench_update",
+    "bench_moe",
+    "bench_train_step",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = 0
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        try:
+            mod = __import__(modname)
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:
+            failed += 1
+            print(f"{modname},ERROR,", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

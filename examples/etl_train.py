@@ -1,0 +1,82 @@
+"""End-to-end driver: CDC events -> METL (DMM) -> canonical batches -> LM.
+
+The full pipeline of DESIGN §2: synthetic microservice databases emit CDC
+events; METL maps them to the canonical data model with the compacted DMM;
+the batcher tokenizes canonical rows into the trainer's canonical batch
+schema; an LM trains on the mapped stream, with checkpoint/restart.
+
+Defaults are CPU-sized.  On a pod, the same driver scales by (a) passing a
+production mesh and (b) raising --model-scale: ``--model-scale 100m`` builds
+a ~100M-parameter model (the paper-kind end-to-end target; a few hundred
+steps on real hardware).
+
+    PYTHONPATH=src python examples/etl_train.py --steps 30
+    PYTHONPATH=src python examples/etl_train.py --model-scale 100m --steps 300  # pod-scale
+"""
+
+import argparse
+
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.core.state import StateCoordinator
+from repro.core.synthetic import ScenarioConfig, build_scenario
+from repro.etl import CanonicalBatcher, EventSource, METLApp
+from repro.train.loop import TrainConfig, train
+from repro.train.optimizer import AdamWConfig
+
+SCALES = {
+    # n_layers, d_model, heads, d_ff  (~params with 8k vocab)
+    "smoke": (2, 64, 4, 256),
+    "10m": (6, 384, 6, 1536),
+    "100m": (12, 768, 12, 3072),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--model-scale", default="smoke", choices=list(SCALES))
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    # -- the ETL side ---------------------------------------------------------
+    sc = build_scenario(ScenarioConfig(n_schemas=12, versions_per_schema=4, seed=0))
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    app = METLApp(coord)
+    source = EventSource(sc.registry, seed=0, p_duplicate=0.05)
+
+    vocab = 8192
+    batcher = CanonicalBatcher(vocab=vocab, seq_len=args.seq, batch_size=args.batch)
+    cursor = {"pos": 0}
+
+    def batch_fn(step):
+        while not batcher.ready():
+            rows = app.consume(source.slice(cursor["pos"], 512))
+            batcher.add_rows(rows)
+            cursor["pos"] += 512
+        return batcher.next_batch()
+
+    # -- the model side -------------------------------------------------------
+    L, D, H, F = SCALES[args.model_scale]
+    cfg = C.get("olmo_1b").replace(
+        n_layers=L, d_model=D, n_heads=H, n_kv_heads=H, d_ff=F, vocab=vocab
+    )
+    print(f"model: {cfg.param_count()/1e6:.1f}M params | ETL state i={coord.registry.state}")
+    tc = TrainConfig(
+        steps=args.steps, batch=args.batch, seq=args.seq, log_every=5,
+        ckpt_dir=args.ckpt_dir, ckpt_every=(20 if args.ckpt_dir else 0),
+        opt=AdamWConfig(lr=1e-3, warmup_steps=10),
+    )
+    out = train(cfg, tc, batch_fn=batch_fn,
+                on_step=lambda s, m: print(f"step {s:4d} loss {m['loss']:.4f}"))
+    first, last = out["history"][0]["loss"], out["history"][-1]["loss"]
+    print(f"ETL stats: {dict(app.stats)}")
+    print(f"loss {first:.3f} -> {last:.3f} on METL-mapped stream "
+          f"({'improved' if last < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

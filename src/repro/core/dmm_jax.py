@@ -1,0 +1,186 @@
+"""Tensorised, device-resident form of the compacted mapping (Algorithm 6).
+
+The paper's final mapping function is a *set lookup*: for each dense set
+element ``(q, p)`` with value 1, move payload slot ``p`` to output slot ``q``.
+On a TPU that is a **gather along the attribute axis**, batched over messages.
+
+Shapes are static (XLA requirement), so the paper's variable-width JSON
+messages become fixed-width payload tensors plus a validity mask:
+
+    values : (batch, n_in)  payload slots in schema-version attribute order
+    mask   : (batch, n_in)  bool; the paper's  nad_p in {0, 1}
+
+and a compacted block becomes an index vector
+
+    src    : (n_out_pad,)   int32; src[q] = p  or  -1 ("null" / filtered)
+
+``n_out_pad`` is rounded up to the TPU lane width (128) so the gather tiles
+cleanly; the pad slots carry src = -1 and are masked out, exactly the paper's
+"there may also be empty container places in the new ships".
+
+Two apply paths are provided:
+
+  * :func:`apply_compacted`   -- the DMM path (gather; optimal)
+  * :func:`apply_onehot`      -- the baseline path (one-hot matmul; this is
+      the "use the matrix directly" formulation the DMM replaces -- kept for
+      A/B benchmarking and as the oracle for the Pallas kernel)
+
+The Pallas kernel realisation of :func:`apply_compacted` is
+:mod:`repro.kernels.masked_gather`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dmm import DPM, BlockKey
+from .registry import Registry
+
+__all__ = [
+    "LANE",
+    "pad_to_lane",
+    "CompactedBlockMap",
+    "compile_block",
+    "compile_dpm",
+    "apply_compacted",
+    "apply_onehot",
+    "CompiledDMM",
+]
+
+LANE = 128  # TPU vector lane width; last-dim tiles must be multiples of this
+
+
+def pad_to_lane(n: int, lane: int = LANE) -> int:
+    return max(lane, -(-n // lane) * lane)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactedBlockMap:
+    """One compacted mapping block, ready for device execution."""
+
+    key: BlockKey
+    n_in: int  # true width of the incoming message (attrs of iD_v^o)
+    n_out: int  # true width of the outgoing message (attrs of iR_w^r)
+    src: jax.Array  # int32 (n_out_pad,): input slot per output slot, -1 = null
+
+    @property
+    def n_out_pad(self) -> int:
+        return int(self.src.shape[0])
+
+    def tree_flatten(self):  # pragma: no cover - convenience
+        return (self.src,), (self.key, self.n_in, self.n_out)
+
+
+def compile_block(
+    key: BlockKey, elements, registry: Registry, lane: int = LANE
+) -> CompactedBlockMap:
+    """Lower one dense set ``{(q_uid, p_uid)}`` to an index vector."""
+    o, v, r, w = key
+    in_uids = registry.domain.get(o, v).uids
+    out_uids = registry.range.get(r, w).uids
+    in_pos = {u: k for k, u in enumerate(in_uids)}
+    out_pos = {u: k for k, u in enumerate(out_uids)}
+    n_in, n_out = len(in_uids), len(out_uids)
+    src = np.full((pad_to_lane(n_out, lane),), -1, dtype=np.int32)
+    for q_uid, p_uid in elements:
+        src[out_pos[q_uid]] = in_pos[p_uid]
+    return CompactedBlockMap(key=key, n_in=n_in, n_out=n_out, src=jnp.asarray(src))
+
+
+def apply_compacted(
+    block: CompactedBlockMap,
+    values: jax.Array,
+    mask: jax.Array,
+    *,
+    fill: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """The DMM mapping: batched masked gather.
+
+    values: (..., n_in) payload, mask: (..., n_in) bool.
+    Returns (out_values (..., n_out_pad), out_mask (..., n_out_pad)).
+    """
+    src = block.src
+    valid = src >= 0
+    safe = jnp.where(valid, src, 0)
+    out_v = jnp.take(values, safe, axis=-1)
+    out_m = jnp.take(mask, safe, axis=-1) & valid
+    out_v = jnp.where(out_m, out_v, jnp.asarray(fill, dtype=out_v.dtype))
+    return out_v, out_m
+
+
+def onehot_matrix(block: CompactedBlockMap) -> jax.Array:
+    """The block as an explicit (n_out_pad, n_in) 0/1 matrix -- the baseline
+    representation the paper compacts away."""
+    src = block.src
+    cols = jnp.arange(block.n_in, dtype=jnp.int32)
+    return (src[:, None] == cols[None, :]).astype(jnp.float32)
+
+
+def apply_onehot(
+    block: CompactedBlockMap,
+    values: jax.Array,
+    mask: jax.Array,
+    *,
+    fill: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Baseline: out = M @ in  (MXU matmul against a sparse 0/1 matrix).
+
+    Mathematically identical to :func:`apply_compacted`; structurally it is
+    the paper's Algorithm-1 world where the matrix itself is the operator.
+    Kept as the A/B baseline and the allclose oracle.
+    """
+    m = onehot_matrix(block)  # (n_out_pad, n_in)
+    out_v = jnp.einsum("qp,...p->...q", m, values.astype(jnp.float32))
+    out_m = jnp.einsum("qp,...p->...q", m, mask.astype(jnp.float32)) > 0.5
+    out_v = jnp.where(out_m, out_v, fill).astype(values.dtype)
+    return out_v, out_m
+
+
+@dataclasses.dataclass
+class CompiledDMM:
+    """All compacted blocks of a state-i DPM, grouped by incoming (o, v).
+
+    This is the device-side analogue of the paper's cached hashmap of
+    column super-sets ``iDCPM_v^o`` ("accessible in O(1)", SS6.2): blocks are
+    keyed by the incoming message's (schema, version), so the per-message
+    work is exactly the blocks that can produce non-empty output.
+    """
+
+    state: int
+    by_column: Dict[Tuple[int, int], List[CompactedBlockMap]]
+
+    def column(self, o: int, v: int) -> List[CompactedBlockMap]:
+        return self.by_column.get((o, v), [])
+
+    @property
+    def n_blocks(self) -> int:
+        return sum(len(b) for b in self.by_column.values())
+
+    def map_batch(
+        self, o: int, v: int, values: jax.Array, mask: jax.Array
+    ) -> List[Tuple[BlockKey, jax.Array, jax.Array]]:
+        """Map a batch of dense messages of one (o, v) through every block in
+        its column super-set.  Each block is an independent mapping path
+        (paper SS5.5) -- XLA executes the gathers in parallel."""
+        outs = []
+        for block in self.column(o, v):
+            ov, om = apply_compacted(block, values, mask)
+            outs.append((block.key, ov, om))
+        return outs
+
+
+def compile_dpm(dpm: DPM, registry: Registry, lane: int = LANE) -> CompiledDMM:
+    """Lower a whole iDPM super-set to device index vectors (the "read into
+    an efficient hashmap" step of the paper's hybrid implementation)."""
+    by_column: Dict[Tuple[int, int], List[CompactedBlockMap]] = {}
+    for key, elements in sorted(dpm.items()):
+        o, v, r, w = key
+        by_column.setdefault((o, v), []).append(
+            compile_block(key, elements, registry, lane)
+        )
+    return CompiledDMM(state=registry.state, by_column=by_column)

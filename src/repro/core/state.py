@@ -1,0 +1,129 @@
+"""Distributed system-state protocol (paper SS3.4-3.5, SS5.5).
+
+The mapping system is distributed: registry, matrix, messages and N
+horizontally-scaled METL instances each carry a state ``i``.  The paper's
+rules, which we enforce here:
+
+  * all scaled app instances must run the same state ``i`` or they "may be
+    producing different messages as a result";
+  * a state change (schema version add/delete, manual matrix edit) bumps
+    ``i`` and **evicts** every derived cache (the paper evicts Caffeine);
+  * during initial-load windows state changes are disabled.
+
+In the SPMD training framework the "instances" are the per-host data-loading
+processes of the mesh's ``data``/``pod`` axes: every host derives its shard
+of the canonical batch from (state i, step), so any host can recompute any
+other host's shard -- that determinism is the straggler/elasticity story.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .dmm import DPM, transform_to_dusb, decompact_dusb, transform_to_dpm, DUSB
+from .registry import Registry, StaleStateError
+
+__all__ = ["SystemState", "StateCoordinator"]
+
+
+@dataclasses.dataclass
+class SystemState:
+    """An immutable snapshot: (state i, DPM) -- what one METL instance runs."""
+
+    i: int
+    dpm: DPM
+
+    def check(self, other_i: int) -> None:
+        if other_i != self.i:
+            raise StaleStateError(f"instance state {self.i} != message state {other_i}")
+
+
+class StateCoordinator:
+    """Single-writer coordinator for state transitions.
+
+    Owns the registry and the authoritative DPM; hands out immutable
+    :class:`SystemState` snapshots to instances.  ``freeze()`` implements the
+    paper's initial-load windows: "during these slots, changes to the
+    schemata and, therefore, to the distributed system and the matrix, can
+    be disabled".
+    """
+
+    def __init__(self, registry: Registry, dpm: Optional[DPM] = None):
+        self._lock = threading.Lock()
+        self.registry = registry
+        self._dpm: DPM = dict(dpm or {})
+        self._frozen = False
+        self._evict_hooks: List[Callable[[int], None]] = []
+
+    # -- snapshots -----------------------------------------------------------
+    def snapshot(self) -> SystemState:
+        with self._lock:
+            return SystemState(i=self.registry.state, dpm=dict(self._dpm))
+
+    # -- cache-eviction fan-out (the Caffeine analogue) ----------------------
+    def on_evict(self, hook: Callable[[int], None]) -> None:
+        self._evict_hooks.append(hook)
+
+    def _evict_all(self) -> None:
+        for hook in self._evict_hooks:
+            hook(self.registry.state)
+
+    # -- load windows ---------------------------------------------------------
+    def freeze(self) -> None:
+        with self._lock:
+            self._frozen = True
+
+    def thaw(self) -> None:
+        with self._lock:
+            self._frozen = False
+
+    def _require_mutable(self) -> None:
+        if self._frozen:
+            raise RuntimeError(
+                "state changes are disabled during an initial-load window"
+            )
+
+    # -- transitions -----------------------------------------------------------
+    def apply_update(
+        self, mutate: Callable[[Registry], Tuple[str, int, int]]
+    ) -> SystemState:
+        """Run a registry mutation + automated DPM update atomically.
+
+        ``mutate`` performs the registry change and returns the Algorithm-5
+        trigger tuple.  Every derived cache is then evicted.
+        """
+        from .dmm import auto_update_dpm
+
+        with self._lock:
+            self._require_mutable()
+            change = mutate(self.registry)
+            self._dpm, report = auto_update_dpm(self._dpm, self.registry, change)
+        self._evict_all()
+        self.last_report = report
+        return SystemState(i=self.registry.state, dpm=dict(self._dpm))
+
+    def set_dpm(self, dpm: DPM) -> None:
+        """Manual matrix edit (UI / CSV upload path)."""
+        with self._lock:
+            self._require_mutable()
+            self._dpm = dict(dpm)
+            self.registry._bump()
+        self._evict_all()
+
+    # -- hybrid persistence (paper SS6.2) --------------------------------------
+    def to_dusb(self) -> DUSB:
+        """Compact the live DPM through iM to iDUSB for storage."""
+        from .dmm import decompact_dpm
+
+        with self._lock:
+            matrix = decompact_dpm(self._dpm, self.registry)
+            return transform_to_dusb(matrix)
+
+    @classmethod
+    def from_dusb(cls, registry: Registry, dusb: DUSB) -> "StateCoordinator":
+        """Restart path: DUSB --Alg.4--> iM --Alg.2--> DPM ("a clear path to
+        recreate iDPM from iDUSB with two algorithms")."""
+        matrix = decompact_dusb(dusb, registry)
+        return cls(registry, transform_to_dpm(matrix))

@@ -1,0 +1,107 @@
+"""Synthetic mapping-system scenarios shaped like the paper's estimates.
+
+Paper SS3.5 numbers we scale down from (controllable via parameters):
+  >10,000 extraction attributes, >1,000 CDM attributes, >=10 versions per
+  schema, ~10 attributes per version, matrix up to 1e9 elements, row:column
+  ratio ~1:100.
+
+The generator builds a registry whose version chains carry realistic
+equivalence links (attributes survive across versions, occasionally get
+dropped or added) and a ground-truth 1:1 mapping matrix in which each
+extraction schema maps predominantly to one business entity (paper SS6.4:
+"many extracting schemata versions map to one business entity version only").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .dmm import DPM, MappingMatrix, transform_to_dpm
+from .registry import Registry
+
+__all__ = ["ScenarioConfig", "Scenario", "build_scenario"]
+
+
+@dataclasses.dataclass
+class ScenarioConfig:
+    n_schemas: int = 8  # extraction schemas (microservice tables)
+    versions_per_schema: int = 4
+    attrs_per_version: int = 10
+    n_entities: int = 2  # CDM business entities
+    cdm_attrs: int = 12  # attributes per business entity version
+    # probability an attribute is dropped when a new version is cut
+    p_drop: float = 0.15
+    # probability a fresh attribute is added in a new version
+    p_add: float = 0.5
+    # fraction of a schema's attributes that map into the CDM
+    map_density: float = 0.6
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Scenario:
+    config: ScenarioConfig
+    registry: Registry
+    matrix: MappingMatrix
+    dpm: DPM
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.matrix.M.shape
+
+
+def build_scenario(config: Optional[ScenarioConfig] = None) -> Scenario:
+    cfg = config or ScenarioConfig()
+    rng = np.random.default_rng(cfg.seed)
+    reg = Registry()
+
+    # -- CDM business entities (one live version each; paper SS5.1 rule) ------
+    for r in range(cfg.n_entities):
+        names = [f"be{r}.c{k}" for k in range(cfg.cdm_attrs)]
+        reg.add_schema(reg.range, r, names)
+
+    # -- extraction schemas with version chains -------------------------------
+    for o in range(cfg.n_schemas):
+        names = [f"s{o}.a{k}" for k in range(cfg.attrs_per_version)]
+        reg.add_schema(reg.domain, o, names)
+        fresh = cfg.attrs_per_version
+        for _ in range(cfg.versions_per_schema - 1):
+            prev = reg.domain.get(o, reg.domain.latest_version(o))
+            keep = [a.name for a in prev.attributes if rng.random() > cfg.p_drop]
+            add: List[str] = []
+            while rng.random() < cfg.p_add and len(add) < 3:
+                add.append(f"s{o}.a{fresh}")
+                fresh += 1
+            if not keep and not add:  # never cut an empty version
+                keep = [prev.attributes[0].name]
+            reg.evolve(reg.domain, o, keep=keep, add=add)
+
+    # -- ground-truth 1:1 mapping ----------------------------------------------
+    # Each schema o maps to entity (o mod n_entities).  The *root* attributes
+    # of the schema are assigned distinct CDM slots; versioned copies inherit
+    # the assignment through equivalence -- which is exactly why the matrix
+    # explodes with versions and why equivalence-copying works (SS5.4.1).
+    matrix = MappingMatrix(reg)
+    for o in reg.domain.schema_ids():
+        r = o % cfg.n_entities
+        entity = reg.range.get(r, reg.range.latest_version(r))
+        cdm_slots = list(entity.uids)
+        rng.shuffle(cdm_slots)
+        root_to_slot: Dict[int, int] = {}
+        for v in reg.domain.versions(o):
+            block = reg.domain.get(o, v)
+            for a in block.attributes:
+                root = reg.domain.equivalence_root(a.uid)
+                if root not in root_to_slot:
+                    if cdm_slots and rng.random() < cfg.map_density:
+                        root_to_slot[root] = cdm_slots.pop()
+                    else:
+                        root_to_slot[root] = -1  # filtered
+                slot = root_to_slot[root]
+                if slot != -1:
+                    matrix.set(slot, a.uid, 1)
+    matrix.validate_one_to_one()
+    return Scenario(config=cfg, registry=reg, matrix=matrix, dpm=transform_to_dpm(matrix))

@@ -1,0 +1,78 @@
+"""Model-plane schema evolution: vocabulary remapping as a DMM block.
+
+When the canonical data model evolves, the batcher's token space evolves
+with it (tokens are (CDM slot, value-bucket) pairs -- etl/batcher.py).  A
+trained checkpoint can follow the evolution without retraining from
+scratch: the old->new vocabulary correspondence *is* a 1:1 mapping block
+(new slots that keep their meaning map to old rows, new slots are fresh,
+dropped slots are filtered), so checkpoint surgery is one masked row-gather
+over the embedding tables -- the paper's Algorithm 6 applied to parameters
+instead of payloads.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+
+__all__ = ["vocab_map_from_names", "remap_vocab_params"]
+
+
+def vocab_map_from_names(
+    old_names: Sequence[str], new_names: Sequence[str]
+) -> np.ndarray:
+    """src[q] = old row feeding new slot q, or -1 for fresh tokens.
+
+    Names play the role of attribute-equivalence roots (paper §5.4.1): a
+    token that exists in both vocabularies keeps its embedding."""
+    index = {n: i for i, n in enumerate(old_names)}
+    return np.asarray([index.get(n, -1) for n in new_names], np.int32)
+
+
+def remap_vocab_params(
+    params: Dict,
+    src: np.ndarray,
+    cfg_old: ModelConfig,
+    cfg_new: ModelConfig,
+    *,
+    fresh_scale: float = 0.0,
+    key: Optional[jax.Array] = None,
+) -> Dict:
+    """Rebuild the embedding (and untied head) for the new vocabulary.
+
+    Kept tokens copy their rows (the DMM 1-elements); fresh tokens (src=-1)
+    initialise to ``fresh_scale``-scaled noise (0 = zeros).  All other
+    parameters pass through untouched -- the surgery is exactly the mapping
+    block.
+    """
+    V_new = cfg_new.vocab_padded
+    if len(src) > V_new:
+        raise ValueError("src longer than the new (padded) vocabulary")
+    src_pad = np.full((V_new,), -1, np.int32)
+    src_pad[: len(src)] = src
+    srcj = jnp.asarray(src_pad)
+    valid = srcj >= 0
+    safe = jnp.where(valid, srcj, 0)
+
+    embed = dict(params["embed"])
+    tok = embed["tok"]
+    new_tok = jnp.take(tok, safe, axis=0)
+    if fresh_scale and key is not None:
+        fresh = (
+            jax.random.normal(key, (V_new, tok.shape[1]), jnp.float32) * fresh_scale
+        ).astype(tok.dtype)
+    else:
+        fresh = jnp.zeros((V_new, tok.shape[1]), tok.dtype)
+    embed["tok"] = jnp.where(valid[:, None], new_tok, fresh)
+    if "head" in embed:
+        head = embed["head"]  # (D, V)
+        new_head = jnp.take(head, safe, axis=1)
+        embed["head"] = jnp.where(valid[None, :], new_head, jnp.zeros_like(new_head))
+    out = dict(params)
+    out["embed"] = embed
+    return out

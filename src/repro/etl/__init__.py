@@ -1,0 +1,3 @@
+from .events import CDCEvent, EventSource  # noqa: F401
+from .metl import METLApp  # noqa: F401
+from .batcher import CanonicalBatcher, make_token_batch  # noqa: F401

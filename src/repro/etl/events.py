@@ -1,0 +1,126 @@
+"""Synthetic CDC event sources (the Debezium stand-in).
+
+Events are *deterministic* functions of (registry state i, stream position):
+any host can regenerate any other host's slice of the stream, which is the
+basis of straggler mitigation and elastic re-assignment in the trainer
+(DESIGN SS4).  The generator reproduces the paper's operational quirks:
+
+  * at-least-once delivery -- "it is possible that FX emits the same
+    data-load twice via different events", controlled by ``p_duplicate``;
+  * stale messages -- an event can carry an older state ``i`` than the
+    registry (the out-of-sync case of SS3.4), controlled by ``p_stale``;
+  * CDC op types (create / update / delete) with before/after payloads;
+  * "null" attributes (optional columns), controlled by ``p_null``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.registry import Registry
+from ..core.dmm import Message
+
+__all__ = ["CDCEvent", "EventSource"]
+
+
+@dataclasses.dataclass
+class CDCEvent:
+    """A log-based CDC event as emitted by the Debezium stand-in."""
+
+    key: int  # unique payload key (dedup handle; survives duplication)
+    op: str  # c | u | d
+    state: int
+    schema_id: int
+    version: int
+    before: Optional[Dict[int, Optional[float]]]
+    after: Optional[Dict[int, Optional[float]]]
+    ts: int
+
+    def message(self) -> Message:
+        """The mappable payload (the 'after' image; deletes map 'before')."""
+        payload = self.after if self.after is not None else (self.before or {})
+        return Message(
+            state=self.state,
+            schema_id=self.schema_id,
+            version=self.version,
+            payload=dict(payload),
+        )
+
+
+class EventSource:
+    """Deterministic synthetic CDC stream over a registry's extraction tree."""
+
+    def __init__(
+        self,
+        registry: Registry,
+        *,
+        seed: int = 0,
+        p_null: float = 0.25,
+        p_duplicate: float = 0.05,
+        p_stale: float = 0.0,
+        p_update: float = 0.3,
+        p_delete: float = 0.05,
+    ):
+        self.registry = registry
+        self.seed = seed
+        self.p_null = p_null
+        self.p_duplicate = p_duplicate
+        self.p_stale = p_stale
+        self.p_update = p_update
+        self.p_delete = p_delete
+
+    def _payload(self, rng: np.random.Generator, schema_id: int, version: int):
+        sv = self.registry.domain.get(schema_id, version)
+        return {
+            a.uid: (None if rng.random() < self.p_null else float(rng.integers(1, 1_000_000)))
+            for a in sv.attributes
+        }
+
+    def slice(self, start: int, count: int) -> List[CDCEvent]:
+        """Events [start, start+count) of the stream.  Pure in (state, start,
+        count): re-calling with the same arguments returns identical events.
+        """
+        out: List[CDCEvent] = []
+        blocks = self.registry.domain.blocks()
+        state = self.registry.state
+        pos = start
+        while len(out) < count:
+            rng = np.random.default_rng((self.seed, state, pos))
+            sv = blocks[int(rng.integers(len(blocks)))]
+            u = rng.random()
+            op = "c" if u >= self.p_update + self.p_delete else ("u" if u >= self.p_delete else "d")
+            after = self._payload(rng, sv.schema_id, sv.version)
+            before = None
+            if op == "u":
+                before = self._payload(rng, sv.schema_id, sv.version)
+            elif op == "d":
+                before, after = after, None
+            ev_state = state
+            if self.p_stale and rng.random() < self.p_stale:
+                ev_state = max(0, state - 1)
+            ev = CDCEvent(
+                key=pos,
+                op=op,
+                state=ev_state,
+                schema_id=sv.schema_id,
+                version=sv.version,
+                before=before,
+                after=after,
+                ts=pos,
+            )
+            out.append(ev)
+            # at-least-once: occasionally deliver the same event twice
+            if rng.random() < self.p_duplicate and len(out) < count:
+                out.append(dataclasses.replace(ev, ts=pos))
+            pos += 1
+        return out[:count]
+
+    def stream(self, start: int = 0, chunk: int = 256) -> Iterator[CDCEvent]:
+        pos = start
+        while True:
+            for ev in self.slice(pos, chunk):
+                yield ev
+            pos += chunk

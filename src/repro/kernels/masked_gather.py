@@ -1,0 +1,116 @@
+"""Pallas TPU kernel for the DMM mapping: batched masked gather.
+
+This is the device realisation of paper Algorithm 6.  The compacted block is
+an index vector ``src (N_out,)`` (-1 = filtered/null); applying it to a batch
+of dense messages is a gather along the attribute (lane) axis.
+
+TPU adaptation (vs. the paper's JVM hashmap lookups):
+
+  * ``src`` is a *scalar-prefetch* operand: it lands in SMEM before the grid
+    body runs, so index tiles are available ahead of the payload tiles
+    streaming HBM->VMEM (the TPU analogue of the paper's Caffeine-cached
+    O(1) column lookup).
+  * The batch axis is tiled to ``block_b`` sublane rows; the output attribute
+    axis is tiled to ``block_n`` lanes (multiples of 128).  Each grid cell
+    reads the *full* input row (mapping widths are small -- schema versions
+    have O(10..1000) attributes, so a row tile fits VMEM comfortably) and
+    gathers one output tile with ``take_along_axis`` on the lane axis.
+  * The paper's "null object" is the validity mask: ``mask`` rides through
+    the same gather and pad slots (src = -1) are forced invalid.
+
+Roofline: the gather moves O(B * (N_in + N_out)) bytes and does no FLOPs --
+it is memory-bound by construction, which is exactly the paper's claim that
+the DMM turns a matrix operator into data movement proportional to the
+*dense* content.  The baseline one-hot matmul kernel
+(:mod:`repro.kernels.onehot_map`) moves the same bytes but burns
+O(B * N_in * N_out) MXU FLOPs; benchmarks/bench_mapping.py reports the A/B.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["masked_gather"]
+
+LANE = 128
+SUBLANE = 8
+
+
+def _kernel(src_ref, vals_ref, mask_ref, out_v_ref, out_m_ref, *, block_n: int, fill: float):
+    j = pl.program_id(1)
+    idx = src_ref[pl.ds(j * block_n, block_n)]  # (block_n,) int32 from SMEM
+    valid = idx >= 0
+    safe = jnp.where(valid, idx, 0)
+    vals = vals_ref[...]  # (block_b, n_in_pad)
+    mask = mask_ref[...]  # (block_b, n_in_pad) int8
+    bb = vals.shape[0]
+    idx2 = jnp.broadcast_to(safe[None, :], (bb, block_n))
+    g_v = jnp.take_along_axis(vals, idx2, axis=1)
+    g_m = jnp.take_along_axis(mask, idx2, axis=1)
+    ok = (g_m != 0) & valid[None, :]
+    out_v_ref[...] = jnp.where(ok, g_v, jnp.asarray(fill, g_v.dtype))
+    out_m_ref[...] = ok.astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_n", "fill", "interpret")
+)
+def masked_gather(
+    values: jax.Array,
+    mask: jax.Array,
+    src: jax.Array,
+    *,
+    block_b: int = 256,
+    block_n: int = LANE,
+    fill: float = 0.0,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Apply a compacted DMM block to a batch of dense messages.
+
+    values: (B, N_in), mask: (B, N_in) int8/bool, src: (N_out,) int32.
+    N_out must be a multiple of ``block_n``; B is padded internally to a
+    multiple of ``block_b``.  Returns ((B, N_out) values, (B, N_out) int8).
+    """
+    b, n_in = values.shape
+    (n_out,) = src.shape
+    if n_out % block_n:
+        raise ValueError(f"N_out={n_out} not a multiple of block_n={block_n}")
+    mask = mask.astype(jnp.int8)
+
+    # pad batch to the sublane tile and n_in to the lane tile
+    bb = min(block_b, max(SUBLANE, b))
+    bb = -(-bb // SUBLANE) * SUBLANE
+    b_pad = -(-b // bb) * bb
+    n_in_pad = -(-n_in // LANE) * LANE
+    if b_pad != b or n_in_pad != n_in:
+        values = jnp.pad(values, ((0, b_pad - b), (0, n_in_pad - n_in)))
+        mask = jnp.pad(mask, ((0, b_pad - b), (0, n_in_pad - n_in)))
+
+    grid = (b_pad // bb, n_out // block_n)
+    out_v, out_m = pl.pallas_call(
+        functools.partial(_kernel, block_n=block_n, fill=fill),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bb, n_in_pad), lambda i, j, src: (i, 0)),
+                pl.BlockSpec((bb, n_in_pad), lambda i, j, src: (i, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((bb, block_n), lambda i, j, src: (i, j)),
+                pl.BlockSpec((bb, block_n), lambda i, j, src: (i, j)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b_pad, n_out), values.dtype),
+            jax.ShapeDtypeStruct((b_pad, n_out), jnp.int8),
+        ],
+        interpret=interpret,
+    )(src, values, mask)
+    return out_v[:b], out_m[:b]

@@ -1,0 +1,96 @@
+"""Baseline Pallas kernel: the mapping applied as an explicit 0/1 matmul.
+
+This is the *pre-DMM* formulation (paper Algorithm 1 / "use the matrix
+directly"): materialise the mapping block as a one-hot matrix and push the
+payload through the MXU.  It exists so the benchmark harness can report the
+paper's A/B -- compacted gather vs. matrix operator -- at the kernel level.
+
+The one-hot matrix is built on the fly inside the kernel from the same
+scalar-prefetched ``src`` vector (building it in HBM would hand the gather
+version a free win on bytes); the MXU contraction is the cost difference.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["onehot_map"]
+
+LANE = 128
+SUBLANE = 8
+
+
+def _kernel(src_ref, vals_ref, mask_ref, out_v_ref, out_m_ref, *, block_n: int, fill: float):
+    j = pl.program_id(1)
+    idx = src_ref[pl.ds(j * block_n, block_n)]  # (block_n,)
+    vals = vals_ref[...].astype(jnp.float32)  # (bb, n_in_pad)
+    mask = mask_ref[...].astype(jnp.float32)
+    n_in_pad = vals.shape[1]
+    # one-hot (block_n, n_in_pad); src = -1 rows are all-zero
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block_n, n_in_pad), 1)
+    m = (idx[:, None] == cols).astype(jnp.float32)
+    out_v = jax.lax.dot_general(
+        vals, m, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bb, block_n)
+    out_m = (
+        jax.lax.dot_general(
+            mask, m, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        > 0.5
+    )
+    out_v_ref[...] = jnp.where(out_m, out_v, fill).astype(out_v_ref.dtype)
+    out_m_ref[...] = out_m.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "fill", "interpret"))
+def onehot_map(
+    values: jax.Array,
+    mask: jax.Array,
+    src: jax.Array,
+    *,
+    block_b: int = 256,
+    block_n: int = LANE,
+    fill: float = 0.0,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Same contract as :func:`repro.kernels.masked_gather.masked_gather`."""
+    b, n_in = values.shape
+    (n_out,) = src.shape
+    if n_out % block_n:
+        raise ValueError(f"N_out={n_out} not a multiple of block_n={block_n}")
+    mask = mask.astype(jnp.int8)
+    bb = min(block_b, max(SUBLANE, b))
+    bb = -(-bb // SUBLANE) * SUBLANE
+    b_pad = -(-b // bb) * bb
+    n_in_pad = -(-n_in // LANE) * LANE
+    if b_pad != b or n_in_pad != n_in:
+        values = jnp.pad(values, ((0, b_pad - b), (0, n_in_pad - n_in)))
+        mask = jnp.pad(mask, ((0, b_pad - b), (0, n_in_pad - n_in)))
+    grid = (b_pad // bb, n_out // block_n)
+    out_v, out_m = pl.pallas_call(
+        functools.partial(_kernel, block_n=block_n, fill=fill),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bb, n_in_pad), lambda i, j, src: (i, 0)),
+                pl.BlockSpec((bb, n_in_pad), lambda i, j, src: (i, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((bb, block_n), lambda i, j, src: (i, j)),
+                pl.BlockSpec((bb, block_n), lambda i, j, src: (i, j)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b_pad, n_out), values.dtype),
+            jax.ShapeDtypeStruct((b_pad, n_out), jnp.int8),
+        ],
+        interpret=interpret,
+    )(src, values, mask)
+    return out_v[:b], out_m[:b]

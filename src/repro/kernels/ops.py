@@ -1,0 +1,89 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Backend dispatch: Pallas-TPU kernels compile for the TPU target; on any
+other backend (this container is CPU) they execute in ``interpret=True``
+mode -- same kernel body, Python semantics -- or fall back to the pure-jnp
+oracle for speed.  ``impl`` lets benchmarks force a path.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .masked_gather import masked_gather as _masked_gather_kernel
+from .onehot_map import onehot_map as _onehot_map_kernel
+from .moe_combine import moe_combine as _moe_combine_kernel
+from .flash_attention import flash_attention as _flash_attention_kernel
+
+__all__ = ["dmm_apply", "moe_combine", "attention", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def dmm_apply(
+    values: jax.Array,
+    mask: jax.Array,
+    src: jax.Array,
+    *,
+    impl: str = "auto",
+    fill: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Apply a compacted DMM block (index vector ``src``) to a payload batch.
+
+    impl:
+      "gather"        Pallas masked-gather kernel (the DMM path)
+      "onehot"        Pallas one-hot matmul kernel (the baseline path)
+      "ref"           pure-jnp oracle (XLA gather)
+      "auto"          Pallas kernel on TPU, oracle elsewhere
+    """
+    if impl == "auto":
+        impl = "gather" if on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.masked_gather_ref(values, mask, src, fill=fill)
+    if impl == "gather":
+        return _masked_gather_kernel(
+            values, mask, src, fill=fill, interpret=not on_tpu()
+        )
+    if impl == "onehot":
+        return _onehot_map_kernel(values, mask, src, fill=fill, interpret=not on_tpu())
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def moe_combine(
+    expert_out: jax.Array, combine: jax.Array, *, impl: str = "auto"
+) -> jax.Array:
+    """Combine expert outputs: (E, C, D), (T, E, C) -> (T, D)."""
+    if impl == "auto":
+        impl = "pallas" if on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.moe_combine_ref(expert_out, combine)
+    if impl == "pallas":
+        return _moe_combine_kernel(combine, expert_out, interpret=not on_tpu())
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    n_rep: int = 1,
+    impl: str = "auto",
+) -> jax.Array:
+    """Single-kernel attention: q (N, S, hd), k/v (N/n_rep, T, hd)."""
+    if impl == "auto":
+        impl = "flash" if on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.attention_ref(q, k, v, causal=causal, n_rep=n_rep)
+    if impl == "flash":
+        return _flash_attention_kernel(
+            q, k, v, causal=causal, n_rep=n_rep, interpret=not on_tpu()
+        )
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the per-kernel allclose sweeps in
+``tests/test_kernels.py`` and are also what the model code calls on
+non-TPU backends.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["masked_gather_ref", "onehot_map_ref", "moe_combine_ref"]
+
+
+def masked_gather_ref(
+    values: jax.Array, mask: jax.Array, src: jax.Array, *, fill: float = 0.0
+) -> Tuple[jax.Array, jax.Array]:
+    """DMM mapping oracle.
+
+    values: (B, N_in) payload, mask: (B, N_in) validity (bool or int8),
+    src: (N_out,) int32 with -1 for filtered/null output slots.
+    Returns (out_values (B, N_out), out_mask (B, N_out) int8).
+    """
+    mask = mask.astype(jnp.bool_)
+    valid = src >= 0
+    safe = jnp.where(valid, src, 0)
+    out_v = jnp.take(values, safe, axis=1)
+    out_m = jnp.take(mask, safe, axis=1) & valid[None, :]
+    out_v = jnp.where(out_m, out_v, jnp.asarray(fill, values.dtype))
+    return out_v, out_m.astype(jnp.int8)
+
+
+def onehot_map_ref(
+    values: jax.Array, mask: jax.Array, src: jax.Array, *, fill: float = 0.0
+) -> Tuple[jax.Array, jax.Array]:
+    """Baseline (paper Algorithm-1 world): apply the mapping as an explicit
+    0/1 matrix-vector product.  Numerically identical to masked_gather_ref."""
+    n_in = values.shape[1]
+    m = (src[:, None] == jnp.arange(n_in, dtype=src.dtype)[None, :]).astype(jnp.float32)
+    out_v = jnp.einsum("qp,bp->bq", m, values.astype(jnp.float32))
+    out_m = jnp.einsum("qp,bp->bq", m, mask.astype(jnp.float32)) > 0.5
+    out_v = jnp.where(out_m, out_v, fill).astype(values.dtype)
+    return out_v, out_m.astype(jnp.int8)
+
+
+def moe_combine_ref(
+    expert_out: jax.Array, combine: jax.Array
+) -> jax.Array:
+    """MoE combine oracle.
+
+    expert_out: (E, C, D) per-expert capacity-bucketed outputs,
+    combine: (T, E, C) combine weights (router prob where token t occupies
+    slot (e, c), else 0).  Returns (T, D).
+    """
+    return jnp.einsum("tec,ecd->td", combine.astype(jnp.float32), expert_out.astype(jnp.float32)).astype(expert_out.dtype)
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True, n_rep: int = 1
+) -> jax.Array:
+    """Dense attention oracle for the flash kernel.
+
+    q: (N, S, hd); k, v: (N // n_rep, T, hd) -- KV heads shared by n_rep
+    query heads (GQA).  Returns (N, S, hd).
+    """
+    import math
+
+    n, s, hd = q.shape
+    kk = jnp.repeat(k, n_rep, axis=0)
+    vv = jnp.repeat(v, n_rep, axis=0)
+    scores = jnp.einsum("nsh,nth->nst", q.astype(jnp.float32), kk.astype(jnp.float32))
+    scores = scores / math.sqrt(hd)
+    if causal:
+        t = kk.shape[1]
+        mask = jnp.arange(s)[:, None] >= jnp.arange(t)[None, :]
+        scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("nst,nth->nsh", probs, vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,65 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run entry point.
+
+Proves the distribution config is coherent without hardware: for every
+(architecture x input-shape x mesh) cell, ``jit(...).lower(...).compile()``
+must succeed on the production meshes (single-pod 16x16 = 256 chips and
+multi-pod 2x16x16 = 512 chips), and the compiled artifact's memory /
+cost / collective analysis is recorded for §Dry-run and §Roofline.
+
+The two lines above run before ANY other import: jax locks the device count
+on first initialisation, and the dry-run needs 512 placeholder host devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo_1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+
+import argparse
+import json
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    # heavyweight imports only after XLA_FLAGS is pinned
+    import repro.configs as configs
+    from repro.launch.dryrun_lib import run_cell
+    from repro.launch.mesh import make_production_mesh
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(multi_pod=False), make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    if args.all:
+        cells = configs.cells()
+    else:
+        archs = [args.arch] if args.arch else configs.ARCHS
+        shapes = [args.shape] if args.shape else list(configs.SHAPES)
+        cells = [(a, s) for a in archs for s in shapes]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_fail = 0
+    for mesh in meshes:
+        for arch, shape in cells:
+            res = run_cell(arch, shape, mesh)
+            n_fail += 0 if res.ok else 1
+            fn = os.path.join(args.out, f"{arch}.{shape}.{res.mesh}.json")
+            with open(fn, "w") as f:
+                json.dump(res.to_json(), f, indent=1)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Per-opcode byte/flop breakdown of one cell's compiled HLO.
+
+Answers "what would move the dominant roofline term down" with data: which
+op class owns the memory term (dot operands? elementwise chains? converts?
+collectives?).
+
+    PYTHONPATH=src python -m repro.launch.hlo_breakdown --cell llama3_405b:train_4k
+"""
+
+import argparse
+import collections
+import re
+
+_BY = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+       "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8}
+
+_OP_RE = re.compile(r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+([a-z0-9-]+)[\s(.]")
+
+GROUPS = {
+    "dot": "matmul", "convolution": "matmul",
+    "add": "elementwise", "multiply": "elementwise", "subtract": "elementwise",
+    "divide": "elementwise", "exponential": "elementwise", "tanh": "elementwise",
+    "maximum": "elementwise", "minimum": "elementwise", "select": "elementwise",
+    "compare": "elementwise", "negate": "elementwise", "rsqrt": "elementwise",
+    "convert": "convert", "bitcast": "layout", "copy": "layout",
+    "transpose": "layout", "reshape": "layout", "broadcast": "layout",
+    "reduce": "reduce", "fusion": "fusion",
+    "all-reduce": "collective", "all-gather": "collective",
+    "reduce-scatter": "collective", "all-to-all": "collective",
+    "collective-permute": "collective",
+    "dynamic-update-slice": "scatter/gather", "dynamic-slice": "scatter/gather",
+    "gather": "scatter/gather", "scatter": "scatter/gather",
+    "parameter": "io", "constant": "io", "iota": "io",
+}
+
+
+def breakdown(hlo_text: str):
+    bytes_by = collections.Counter()
+    count_by = collections.Counter()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dt, dims, op = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        grp = GROUPS.get(op, op)
+        bytes_by[grp] += n * _BY.get(dt, 4)
+        count_by[grp] += 1
+    return bytes_by, count_by
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--layers", type=int, default=2)
+    args = ap.parse_args()
+
+    import repro.configs as configs
+    from repro.launch.dryrun_lib import _compile_cell, _reduced
+    from repro.launch.mesh import make_production_mesh
+    from repro.sharding.specs import make_policy
+
+    arch, shape = args.cell.split(":")
+    cfg = _reduced(configs.get(arch), args.layers)
+    cell = configs.SHAPES[shape]
+    mesh = make_production_mesh()
+    sp = make_policy(mesh)
+    compiled = _compile_cell(cfg, cell, sp, cost_pass=True)
+    b, c = breakdown(compiled.as_text())
+    total = sum(b.values())
+    print(f"{arch}:{shape} (L={args.layers} unrolled, per-device result bytes)")
+    for grp, by in b.most_common():
+        print(f"  {grp:16s} {by/1e9:9.2f} GB ({100*by/total:5.1f}%)  x{c[grp]}")
+
+
+if __name__ == "__main__":
+    main()

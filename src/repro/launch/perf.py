@@ -1,0 +1,88 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb runner: lower+compile named config variants of one cell
+and compare roofline terms side by side.
+
+    PYTHONPATH=src python -m repro.launch.perf --cell llama3_405b:train_4k \
+        --variants baseline,chunked_attn --out experiments/perf
+
+Variants are named config overrides registered in VARIANTS below; each run
+is a full dry-run cell (memory + extrapolated cost + collectives) written to
+``<out>/<arch>.<shape>.<variant>.json`` and summarised as a table.
+"""
+
+import argparse
+import json
+
+
+VARIANTS = {
+    "baseline": {},
+    # flash-style online-softmax attention: no (S,T) score materialisation
+    "chunked_attn": {"attn_impl": "chunked"},
+    # remat policy: keep matmul outputs, recompute elementwise only
+    "remat_dots": {"remat": "dots"},
+    "no_remat": {"remat": "none"},
+    "chunked_attn_remat_dots": {"attn_impl": "chunked", "remat": "dots"},
+    # MoE dispatch paths
+    "moe_ep": {"moe_impl": "ep"},
+    "moe_dmm": {"moe_impl": "dmm"},
+    # rwkv time-mix form
+    "rwkv_chunked": {"rwkv_impl": "chunked"},
+    # microbatch count: fewer weight re-gathers vs larger live activations
+    "n_micro4": {"_n_micro": 4},
+    "n_micro16": {"_n_micro": 16},
+    "moe_ep_chunked": {"moe_impl": "ep", "attn_impl": "chunked"},
+    # EP padding waste scales with per-shard capacity; tighten it
+    "moe_ep_cap1": {"moe_impl": "ep", "capacity_factor": 1.0},
+    # sequence-parallel remat storage (Megatron-SP style carry stack)
+    "sp_carry": {"sp_carry": True},
+    "sp_carry_nm16": {"sp_carry": True, "_n_micro": 16},
+    "rwkv_scan_nm4": {"rwkv_impl": "scan", "_n_micro": 4},
+    "rwkv_chunked_nm1": {"rwkv_impl": "chunked", "_n_micro": 1},
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun_lib import run_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import analyze
+
+    arch, shape = args.cell.split(":")
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    os.makedirs(args.out, exist_ok=True)
+    rows = []
+    for name in args.variants.split(","):
+        ov = VARIANTS[name]
+        res = run_cell(arch, shape, mesh, overrides=ov)
+        rec = res.to_json()
+        rec["variant"] = name
+        fn = os.path.join(args.out, f"{arch}.{shape}.{name}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1)
+        if res.ok and not res.skipped:
+            row = analyze(rec)
+            row["variant"] = name
+            row["temp_gb"] = res.memory["temp_bytes"] / 1e9
+            rows.append(row)
+        else:
+            print(f"{name}: FAILED {res.error[:200]}")
+
+    print(f"\n== {arch} {shape} mesh={'2x16x16' if args.multi_pod else '16x16'} ==")
+    print(f"{'variant':28s} {'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+          f"{'bottleneck':>11s} {'roofline':>9s} {'temp_GB':>8s}")
+    for r in rows:
+        print(f"{r['variant']:28s} {r['compute_s']:10.3e} {r['memory_s']:10.3e} "
+              f"{r['collective_s']:10.3e} {r['bottleneck']:>11s} "
+              f"{r['roofline_fraction']:9.3f} {r['temp_gb']:8.1f}")
+
+
+if __name__ == "__main__":
+    main()

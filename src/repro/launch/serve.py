@@ -1,0 +1,46 @@
+"""Serving launcher: batched greedy decoding with the continuous-batching
+server.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b --smoke \
+        --requests 8 --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo_1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    import numpy as np
+    import jax
+
+    import repro.configs as configs
+    from repro.models import model as M
+    from repro.serve.decode import ServeConfig, Server
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    sc = ServeConfig(batch=args.batch, cache_len=args.cache_len, max_new=args.max_new)
+    server = Server(params, cfg, sc)
+    rng = np.random.default_rng(0)
+    rids = [
+        server.submit(rng.integers(2, cfg.vocab, size=rng.integers(2, 8)).tolist())
+        for _ in range(args.requests)
+    ]
+    server.run(n_steps=args.requests * (args.max_new + 8))
+    for rid in rids:
+        toks = server.done.get(rid)
+        print(f"request {rid}: {len(toks or [])} tokens -> {toks[:12] if toks else 'PENDING'}")
+
+
+if __name__ == "__main__":
+    main()

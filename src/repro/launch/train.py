@@ -1,0 +1,67 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo_1b --smoke \
+        --steps 50 --batch 8 --seq 128 [--ckpt-dir ckpts/run0] [--mesh 1x1]
+
+Runs the real loop (ETL-synthetic batches, AdamW, checkpointing).  On this
+CPU container use --smoke (reduced config); the full configs are exercised
+by the dry-run.  A --mesh of NxM uses the local devices (set
+XLA_FLAGS=--xla_force_host_platform_device_count=K to fake K devices).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo_1b")
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--mesh", default=None, help="DxM local mesh, e.g. 2x2")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--moe-impl", default=None, choices=["dense", "dmm", "ep"])
+    args = ap.parse_args()
+
+    import repro.configs as configs
+    from repro.launch.mesh import make_local_mesh
+    from repro.train.loop import TrainConfig, train
+    from repro.train.optimizer import AdamWConfig
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    if args.moe_impl:
+        cfg = cfg.replace(moe_impl=args.moe_impl)
+    tc = TrainConfig(
+        steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        n_micro=args.n_micro,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        opt=AdamWConfig(lr=args.lr, compress_grads=args.compress_grads),
+    )
+    mesh = None
+    if args.mesh:
+        d, m = map(int, args.mesh.split("x"))
+        mesh = make_local_mesh(d, m)
+
+    def on_step(step, m):
+        print(
+            f"step {step:5d}  loss {m['loss']:8.4f}  gnorm {m['grad_norm']:8.3f}  "
+            f"lr {m['lr']:.2e}  wall {m['wall']:7.1f}s",
+            flush=True,
+        )
+
+    out = train(cfg, tc, mesh=mesh, on_step=on_step)
+    print(f"final loss: {out['history'][-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

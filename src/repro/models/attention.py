@@ -1,0 +1,272 @@
+"""Grouped-query attention with RoPE, sliding windows and KV-cache decode.
+
+Training path avoids materialising repeated KV heads: queries are reshaped
+to (B, S, G, Hg, hd) where G = n_kv_heads groups, so scores contract against
+the (B, T, G, hd) keys directly.  Sliding-window archs (hymba) apply a band
+mask in training and keep a rolling window cache in decode.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rope, trunc_normal
+
+__all__ = [
+    "attn_params",
+    "attention_train",
+    "attention_decode",
+    "init_kv_cache",
+]
+
+NEG_INF = -1e9
+
+
+def attn_params(key, cfg: ModelConfig, d_in: Optional[int] = None) -> Dict:
+    D = d_in or cfg.d_model
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": trunc_normal(ks[0], (D, H * hd), 1.0, cfg.pdtype),
+        "wk": trunc_normal(ks[1], (D, KV * hd), 1.0, cfg.pdtype),
+        "wv": trunc_normal(ks[2], (D, KV * hd), 1.0, cfg.pdtype),
+        "wo": trunc_normal(ks[3], (H * hd, D), 1.0, cfg.pdtype),
+    }
+
+
+def _qkv(p: Dict, x: jax.Array, cfg: ModelConfig):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(cfg.cdtype)).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(cfg.cdtype)).reshape(B, S, KV, hd)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(cfg.cdtype)).reshape(B, S, KV, hd)
+    return q, k, v
+
+
+def _band_mask(
+    S: int, T: int, offset: int, window: int, causal: bool, k_offset: int = 0
+) -> jax.Array:
+    """(S, T) additive mask.  query position i attends key position j iff
+    (not causal or j+k_offset <= i+offset) and (window == 0 or
+    i+offset-(j+k_offset) < window)."""
+    qi = jnp.arange(S)[:, None] + offset
+    kj = jnp.arange(T)[None, :] + k_offset
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= kj <= qi
+    if window:
+        ok &= (qi - kj) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, T, KV, hd)
+    v: jax.Array,  # (B, T, KV, hd)
+    mask: Optional[jax.Array],  # (S, T) additive or (B, S, T)
+    cfg: ModelConfig,
+    sh=None,
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    Hg = H // KV
+    qg = q.reshape(B, S, KV, Hg, hd)
+    scores = jnp.einsum("bsghd,btgd->bghst", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    if mask is not None:
+        m = mask if mask.ndim == 3 else mask[None]
+        scores = scores + m[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(cfg.cdtype)
+    out = jnp.einsum("bghst,btgd->bsghd", probs, v)
+    out = out.reshape(B, S, H * hd)
+    if sh is not None:
+        out = sh.act_heads(out)
+    return out
+
+
+def _sdpa_chunked(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, T, KV, hd)
+    v: jax.Array,
+    cfg: ModelConfig,
+    *,
+    causal: bool,
+    window: int,
+    n_chunks: int = 8,
+    sh=None,
+) -> jax.Array:
+    """Flash-style online-softmax attention over KV chunks.
+
+    Never materialises the (S, T) score matrix: peak score memory drops by
+    n_chunks x (llama3-405b train_4k: 2.15 GB -> 0.27 GB per score buffer).
+    The chunk loop is a python loop (unrolled HLO), so the dry-run cost pass
+    still counts every chunk.  Numerically matches _sdpa to ~1e-6 (f32
+    running max/denominator).
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    while T % n_chunks:
+        n_chunks -= 1
+    Tc = T // n_chunks
+    Hg = H // KV
+    qg = q.reshape(B, S, KV, Hg, hd)
+    scale = 1.0 / math.sqrt(hd)
+    m = jnp.full((B, KV, Hg, S), -1e30, jnp.float32)
+    l = jnp.zeros((B, KV, Hg, S), jnp.float32)
+    acc = jnp.zeros((B, KV, Hg, S, hd), jnp.float32)
+    for j in range(n_chunks):
+        kj = k[:, j * Tc : (j + 1) * Tc]
+        vj = v[:, j * Tc : (j + 1) * Tc]
+        s = jnp.einsum("bsghd,btgd->bghst", qg, kj).astype(jnp.float32) * scale
+        if causal or window:
+            s = s + _band_mask(S, Tc, 0, window, causal, k_offset=j * Tc)[None, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bghst,btgd->bghsd", p.astype(cfg.cdtype), vj
+        ).astype(jnp.float32)
+        m = m_new
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(cfg.cdtype)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, H * hd)  # (B,S,KV,Hg,hd)->(B,S,E)
+    if sh is not None:
+        out = sh.act_heads(out)
+    return out
+
+
+def attention_train(
+    p: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    sh=None,
+) -> jax.Array:
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    S = x.shape[1]
+    if cfg.attn_impl == "pallas" and window == 0:
+        # Pallas flash kernel on TPU (dense oracle on other backends)
+        from ..kernels import ops as kops
+
+        B, _, H, hd = q.shape
+        KV = k.shape[2]
+        qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+        vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+        # interleave query-head groups so heads sharing a KV head are adjacent
+        qf = (
+            q.reshape(B, S, KV, H // KV, hd)
+            .transpose(0, 2, 3, 1, 4)
+            .reshape(B * H, S, hd)
+        )
+        of = kops.attention(qf, kf, vf, causal=causal, n_rep=H // KV)
+        out = (
+            of.reshape(B, KV, H // KV, S, hd).transpose(0, 3, 1, 2, 4).reshape(B, S, H * hd)
+        )
+        if sh is not None:
+            out = sh.act_heads(out)
+    elif cfg.attn_impl == "chunked":
+        out = _sdpa_chunked(q, k, v, cfg, causal=causal, window=window, sh=sh)
+    else:
+        mask = _band_mask(S, S, 0, window, causal) if (causal or window) else None
+        out = _sdpa(q, k, v, mask, cfg, sh)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"].astype(cfg.cdtype))
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, length: int, layers: int) -> Dict:
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    shape = (layers, batch, length, KV, hd)
+    return {
+        "k": jnp.zeros(shape, cfg.cdtype),
+        "v": jnp.zeros(shape, cfg.cdtype),
+    }
+
+
+def attention_decode(
+    p: Dict,
+    x: jax.Array,  # (B, 1, D) the new token's activation
+    cache_k: jax.Array,  # (B, T, KV, hd) this layer's cache
+    cache_v: jax.Array,
+    pos: jax.Array,  # scalar int32: index of the new token
+    cfg: ModelConfig,
+    *,
+    window: int = 0,
+    sh=None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode step.  Returns (out, new_cache_k, new_cache_v).
+
+    For sliding-window layers the cache is a rolling buffer of size
+    ``window``; the write slot is ``pos % window`` and key positions are
+    reconstructed from the rolling layout, so memory is O(window) no matter
+    how long the stream (this is what makes hymba's 500k decode legal).
+    """
+    B = x.shape[0]
+    T = cache_k.shape[1]
+    q, k, v = _qkv(p, x, cfg)  # (B, 1, ...)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.pos == "rope":
+        q = rope(q, posv, cfg.rope_theta)
+        k = rope(k, posv, cfg.rope_theta)
+    slot = (pos % T) if window else pos
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+    # key validity: slot j holds absolute position (for rolling buffers the
+    # newest T positions), attendable iff its absolute position <= pos
+    j = jnp.arange(T)
+    if window:
+        # rolling: absolute position of slot j is the largest value <= pos
+        # congruent to j (mod T); valid once written (pos - abs < window <= T)
+        abs_pos = pos - ((pos - j) % T)
+        valid = abs_pos >= 0
+    else:
+        abs_pos = j
+        valid = j <= pos
+    mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[None, None, :]
+    out = _sdpa(q, cache_k, cache_v, mask, cfg, sh)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(cfg.cdtype))
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attention(
+    p: Dict,
+    x: jax.Array,  # (B, S, D) decoder activations
+    mem_k: jax.Array,  # (B, T, KV, hd) projected encoder keys
+    mem_v: jax.Array,
+    cfg: ModelConfig,
+    sh=None,
+) -> jax.Array:
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(cfg.cdtype)).reshape(B, S, H, hd)
+    out = _sdpa(q, mem_k, mem_v, None, cfg, sh)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"].astype(cfg.cdtype))
+
+
+def project_memory(p: Dict, mem: jax.Array, cfg: ModelConfig):
+    """Project encoder output once; reused every decode step."""
+    B, T, _ = mem.shape
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    k = jnp.einsum("btd,de->bte", mem, p["wk"].astype(cfg.cdtype)).reshape(B, T, KV, hd)
+    v = jnp.einsum("btd,de->bte", mem, p["wv"].astype(cfg.cdtype)).reshape(B, T, KV, hd)
+    return k, v

@@ -1,0 +1,165 @@
+"""Shared building blocks for the architecture zoo.
+
+Everything is functional: params are plain pytrees (nested dicts of arrays),
+layers are pure functions.  Model-level stacking / scanning lives in
+:mod:`repro.models.model`.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+__all__ = [
+    "trunc_normal",
+    "norm_params",
+    "apply_norm",
+    "rope",
+    "mlp_params",
+    "apply_mlp",
+    "embed_params",
+    "cross_entropy",
+]
+
+
+def trunc_normal(key, shape, scale: float, dtype) -> jax.Array:
+    """He-style truncated normal init (std = scale / sqrt(fan_in))."""
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    std = scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_params(cfg: ModelConfig, with_bias: Optional[bool] = None) -> Dict:
+    """Parameters for one norm site (possibly empty -- olmo's non-parametric LN)."""
+    if cfg.norm == "nonparametric_ln":
+        return {}
+    if with_bias is None:
+        with_bias = cfg.norm == "layernorm"
+    p = {"scale": jnp.ones((cfg.d_model,), cfg.pdtype)}
+    if with_bias:
+        p["bias"] = jnp.zeros((cfg.d_model,), cfg.pdtype)
+    return p
+
+
+def apply_norm(p: Dict, x: jax.Array, cfg: ModelConfig, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (xf * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    # layernorm (parametric or olmo's non-parametric variant)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if p:
+        xf = xf * p["scale"].astype(jnp.float32)
+        if "bias" in p:
+            xf = xf + p["bias"].astype(jnp.float32)
+    return xf.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )  # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(key, cfg: ModelConfig) -> Dict:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": trunc_normal(ks[0], (D, F), 1.0, cfg.pdtype),
+        "w_out": trunc_normal(ks[1], (F, D), 1.0, cfg.pdtype),
+    }
+    if cfg.activation == "swiglu":
+        p["w_gate"] = trunc_normal(ks[2], (D, F), 1.0, cfg.pdtype)
+    return p
+
+
+def apply_mlp(p: Dict, x: jax.Array, cfg: ModelConfig, sh=None) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["w_in"].astype(cfg.cdtype))
+    if cfg.activation == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(cfg.cdtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(cfg.cdtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(cfg.cdtype)
+    if sh is not None:
+        h = sh.act_ff(h)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"].astype(cfg.cdtype))
+
+
+# ---------------------------------------------------------------------------
+# Embeddings & loss
+# ---------------------------------------------------------------------------
+
+
+def embed_params(key, cfg: ModelConfig) -> Dict:
+    V, D = cfg.vocab_padded, cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = {"tok": trunc_normal(ks[0], (V, D), math.sqrt(D), cfg.pdtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = trunc_normal(ks[1], (D, V), 1.0, cfg.pdtype)
+    if cfg.pos == "learned":
+        p["pos"] = trunc_normal(ks[2], (cfg.max_seq_emb() or cfg.max_seq, D), 1.0, cfg.pdtype)
+    return p
+
+
+def lm_logits(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = p["tok"].astype(cfg.cdtype).T
+    else:
+        w = p["head"].astype(cfg.cdtype)
+    return jnp.einsum("...d,dv->...v", x, w)
+
+
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array, cfg: ModelConfig, weight: Optional[jax.Array] = None
+) -> jax.Array:
+    """Mean token cross-entropy; pad-vocab columns are masked to -inf.
+
+    The pad mask is an additive (V,) vector, NOT a concatenate: the concat
+    formulation materialised a second full f32 logits tensor (≈0.8 GB/device
+    on the 1M-token cells; EXPERIMENTS.md §Perf iteration 2)."""
+    v = cfg.vocab
+    lg = logits.astype(jnp.float32)
+    if cfg.vocab_padded != v:
+        pad_mask = jnp.where(jnp.arange(cfg.vocab_padded) < v, 0.0, -1e9).astype(
+            jnp.float32
+        )
+        lg = lg + pad_mask  # fuses into the softmax chain
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if weight is None:
+        return jnp.mean(nll)
+    w = weight.astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)

@@ -1,0 +1,425 @@
+"""The architecture zoo: one functional model covering all 10 assigned archs.
+
+Families
+--------
+dense   olmo-1b, llama3-405b, phi3-medium-14b, stablelm-1.6b
+moe     qwen3-moe-30b-a3b, dbrx-132b            (MoE FFN via repro.models.moe)
+ssm     rwkv6-3b                                 (attention-free, RWKV-6)
+hybrid  hymba-1.5b                               (parallel attn + mamba heads)
+audio   whisper-tiny                             (enc-dec; conv frontend stubbed)
+vlm     internvl2-1b                             (ViT frontend stubbed)
+
+Layers are stacked (leading L dim) and executed with ``lax.scan`` so compile
+time and HLO size are O(1) in depth -- llama3-405b's 126 layers lower in the
+same time as olmo's 16.  Remat (``cfg.remat``) wraps the scanned body.
+
+Entry points: ``init_params``, ``forward`` (logits), ``loss_fn``,
+``init_decode_state`` / ``decode_step`` (single-token serving).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    attn_params,
+    attention_train,
+    attention_decode,
+    cross_attention,
+    project_memory,
+)
+from .config import ModelConfig
+from .layers import (
+    apply_mlp,
+    apply_norm,
+    cross_entropy,
+    embed_params,
+    lm_logits,
+    mlp_params,
+    norm_params,
+    trunc_normal,
+)
+from .moe import moe_apply, moe_params
+from .ssm import (
+    mamba_decode,
+    mamba_init_state,
+    mamba_params,
+    mamba_train,
+    rwkv_channel_mix,
+    rwkv_channel_params,
+    rwkv_decode,
+    rwkv_init_state,
+    rwkv_params,
+    rwkv_train,
+)
+
+__all__ = [
+    "init_params",
+    "forward",
+    "loss_fn",
+    "init_decode_state",
+    "decode_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _layer_params(key, cfg: ModelConfig) -> Dict:
+    ks = jax.random.split(key, 8)
+    fam = cfg.family
+    if fam == "ssm":
+        return {
+            "ln1": norm_params(cfg),
+            "tm": rwkv_params(ks[0], cfg),
+            "ln2": norm_params(cfg),
+            "cm": rwkv_channel_params(ks[1], cfg),
+        }
+    p: Dict[str, Any] = {
+        "norm1": norm_params(cfg),
+        "attn": attn_params(ks[0], cfg),
+        "norm2": norm_params(cfg),
+    }
+    if fam == "hybrid":
+        p["mamba"] = mamba_params(ks[1], cfg)
+        p["mlp"] = mlp_params(ks[2], cfg)
+    elif cfg.is_moe:
+        p["moe"] = moe_params(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_params(ks[1], cfg)
+    if cfg.enc_dec:  # decoder layer gains cross-attention
+        p["norm_x"] = norm_params(cfg)
+        p["xattn"] = attn_params(ks[3], cfg)
+    return p
+
+
+def _enc_layer_params(key, cfg: ModelConfig) -> Dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": norm_params(cfg),
+        "attn": attn_params(ks[0], cfg),
+        "norm2": norm_params(cfg),
+        "mlp": mlp_params(ks[1], cfg),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    k_embed, k_layers, k_enc, k_final = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params: Dict[str, Any] = {
+        "embed": embed_params(k_embed, cfg),
+        "layers": jax.vmap(lambda k: _layer_params(k, cfg))(layer_keys),
+        "final_norm": norm_params(cfg),
+    }
+    if cfg.enc_dec:
+        enc_keys = jax.random.split(k_enc, cfg.enc_layers)
+        params["enc_layers"] = jax.vmap(lambda k: _enc_layer_params(k, cfg))(enc_keys)
+        params["enc_final_norm"] = norm_params(cfg)
+        params["enc_pos"] = trunc_normal(k_final, (cfg.enc_seq, cfg.d_model), 1.0, cfg.pdtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies (train)
+# ---------------------------------------------------------------------------
+
+
+def _decoder_layer_train(
+    lp: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    sh,
+    memory: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """One transformer layer.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+    if fam == "ssm":
+        h, _ = rwkv_train(
+            lp["tm"], apply_norm(lp["ln1"], x, cfg), cfg, impl=cfg.rwkv_impl, sh=sh
+        )
+        x = x + h
+        cm, _ = rwkv_channel_mix(
+            lp["cm"],
+            apply_norm(lp["ln2"], x, cfg),
+            jnp.zeros((x.shape[0], 1, x.shape[2]), x.dtype),
+            cfg,
+            sh=sh,
+        )
+        return x + cm, aux
+    xn = apply_norm(lp["norm1"], x, cfg)
+    attn_out = attention_train(
+        lp["attn"], xn, positions, cfg, causal=True, window=cfg.window, sh=sh
+    )
+    if fam == "hybrid":
+        ssm_out, _ = mamba_train(lp["mamba"], xn, cfg, sh=sh)
+        x = x + 0.5 * (attn_out + ssm_out)  # mean-fused parallel heads (Hymba)
+    else:
+        x = x + attn_out
+    if memory is not None:
+        x = x + cross_attention(
+            lp["xattn"], apply_norm(lp["norm_x"], x, cfg), memory[0], memory[1], cfg, sh
+        )
+    xn2 = apply_norm(lp["norm2"], x, cfg)
+    if cfg.is_moe:
+        ff, aux = moe_apply(lp["moe"], xn2, cfg, sh=sh)
+    else:
+        ff = apply_mlp(lp["mlp"], xn2, cfg, sh=sh)
+    x = x + ff
+    if sh is not None:
+        x = sh.act_btd(x)
+    return x, aux
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # full
+
+
+def _scan_layers(layers: Dict, x: jax.Array, body, cfg: ModelConfig, sh=None):
+    """body(lp, x) -> (x, aux); scanned over the stacked layer params."""
+
+    def f(carry, lp):
+        if cfg.sp_carry and sh is not None and sh.mesh is not None:
+            # sequence-parallel remat storage: the saved per-layer residual
+            # stack is sharded over the model axis on S (divides the 405B
+            # carry stack by 16); the body re-gathers S at the first matmul
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            spec = P(sh.data_axes, sh.model_axis, None)
+            carry = jax.lax.with_sharding_constraint(
+                carry, NamedSharding(sh.mesh, spec)
+            )
+        # barrier: without it XLA fuses apply_norm's f32 convert into the
+        # per-layer carry save buffer, storing residuals at 2x bytes
+        carry = jax.lax.optimization_barrier(carry)
+        y, aux = body(lp, carry)
+        return y, aux
+
+    n = jax.tree_util.tree_leaves(layers)[0].shape[0]
+    y, auxs = jax.lax.scan(
+        _remat(f, cfg), x, layers, unroll=n if cfg.scan_unroll else 1
+    )
+    return y, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# Forward (training)
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params: Dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0).astype(cfg.cdtype)
+    if cfg.pos == "learned" and not cfg.enc_dec:
+        S = tokens.shape[1]
+        x = x + params["embed"]["pos"][:S][None].astype(cfg.cdtype)
+    return x
+
+
+def _encode(params: Dict, frames: jax.Array, cfg: ModelConfig, sh) -> jax.Array:
+    """Whisper encoder over stubbed conv-frontend frames (B, enc_seq, D)."""
+    x = frames.astype(cfg.cdtype) + params["enc_pos"][None].astype(cfg.cdtype)
+    positions = jnp.arange(frames.shape[1])[None]
+
+    def body(lp, h):
+        hn = apply_norm(lp["norm1"], h, cfg)
+        h = h + attention_train(lp["attn"], hn, positions, cfg, causal=False, sh=sh)
+        h = h + apply_mlp(lp["mlp"], apply_norm(lp["norm2"], h, cfg), cfg, sh=sh)
+        return h, jnp.zeros((), jnp.float32)
+
+    x, _ = _scan_layers(params["enc_layers"], x, body, cfg, sh)
+    return apply_norm(params["enc_final_norm"], x, cfg)
+
+
+def forward(
+    params: Dict, cfg: ModelConfig, batch: Dict[str, jax.Array], sh=None
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S, V_pad), aux_loss)."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens, cfg)
+    if cfg.pos == "learned" and cfg.enc_dec:
+        S = tokens.shape[1]
+        x = x + params["embed"]["pos"][:S][None].astype(cfg.cdtype)
+    if cfg.family == "vlm":
+        # stubbed ViT frontend: precomputed patch embeddings prefix the text
+        x = jnp.concatenate([batch["patches"].astype(cfg.cdtype), x], axis=1)
+    if sh is not None:
+        x = sh.act_btd(x)
+    positions = jnp.arange(x.shape[1])[None]
+
+    memory = None
+    if cfg.enc_dec:
+        enc = _encode(params, batch["frames"], cfg, sh)
+        # project encoder memory once per layer inside the scan would recompute
+        # per layer; instead keep raw memory and let each layer project (the
+        # per-layer wk/wv differ).  memory: raw encoder output.
+        memory = enc
+
+    def body(lp, h):
+        mem = None
+        if memory is not None:
+            mem = project_memory(lp["xattn"], memory, cfg)
+        return _decoder_layer_train(lp, h, positions, cfg, sh, memory=mem)
+
+    x, aux = _scan_layers(params["layers"], x, body, cfg, sh)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = lm_logits(params["embed"], x, cfg)
+    if sh is not None:
+        logits = sh.logits(logits)
+    return logits, aux
+
+
+AUX_WEIGHT = 0.01
+
+
+def loss_fn(params: Dict, cfg: ModelConfig, batch: Dict[str, jax.Array], sh=None) -> jax.Array:
+    logits, aux = forward(params, cfg, batch, sh)
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        pfx = batch["patches"].shape[1]
+        logits = logits[:, pfx:]
+    loss = cross_entropy(logits, labels, cfg, batch.get("loss_weight"))
+    return loss + AUX_WEIGHT * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving): single-token step against a cache
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int) -> Dict:
+    """Cache pytree for one-token-at-a-time serving.
+
+    cache_len: KV history length (window size for sliding-window archs; the
+    ssm/hybrid families carry O(1)/O(window) state -- that is what makes the
+    500k cell runnable for them).
+    """
+    L = cfg.n_layers
+    state: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        state["rwkv"] = rwkv_init_state(cfg, batch, L)
+        return state
+    kv_len = min(cache_len, cfg.window) if cfg.window else cache_len
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    state["k"] = jnp.zeros((L, batch, kv_len, KV, hd), cfg.cdtype)
+    state["v"] = jnp.zeros((L, batch, kv_len, KV, hd), cfg.cdtype)
+    if cfg.family == "hybrid":
+        state["mamba"] = mamba_init_state(cfg, batch, L)
+    if cfg.enc_dec:
+        state["xk"] = jnp.zeros((L, batch, cfg.enc_seq, KV, hd), cfg.cdtype)
+        state["xv"] = jnp.zeros((L, batch, cfg.enc_seq, KV, hd), cfg.cdtype)
+    return state
+
+
+def prefill_memory(params: Dict, cfg: ModelConfig, frames: jax.Array, state: Dict, sh=None) -> Dict:
+    """Whisper: run the encoder once, project per-layer cross K/V into the cache."""
+    enc = _encode(params, frames, cfg, sh)
+
+    def proj(lp):
+        return project_memory(lp["xattn"], enc, cfg)
+
+    xk, xv = jax.vmap(proj)(params["layers"])
+    state = dict(state)
+    state["xk"], state["xv"] = xk, xv
+    return state
+
+
+def decode_step(
+    params: Dict,
+    cfg: ModelConfig,
+    state: Dict,
+    token: jax.Array,  # (B,) int32
+    sh=None,
+) -> Tuple[jax.Array, Dict]:
+    """One serving step: consume `token`, return (logits (B, V_pad), state')."""
+    pos = state["pos"]
+    B = token.shape[0]
+    x = jnp.take(params["embed"]["tok"], token[:, None], axis=0).astype(cfg.cdtype)
+    if cfg.pos == "learned":
+        x = x + params["embed"]["pos"][pos][None, None].astype(cfg.cdtype)
+    new_state: Dict[str, Any] = {"pos": pos + 1}
+
+    if cfg.family == "ssm":
+        st = state["rwkv"]
+
+        def body(h, inp):
+            lp, wkv, x_tm, x_cm = inp
+            hn = apply_norm(lp["ln1"], h, cfg)
+            tm_out, ns = rwkv_decode(lp["tm"], hn, {"x_tm": x_tm, "wkv": wkv}, cfg, sh)
+            h = h + tm_out
+            hn2 = apply_norm(lp["ln2"], h, cfg)
+            cm_out, x_cm2 = rwkv_channel_mix(lp["cm"], hn2, x_cm, cfg, sh)
+            h = h + cm_out
+            return h, (ns["wkv"], hn, x_cm2)
+
+        x, (wkv2, xtm2, xcm2) = jax.lax.scan(
+            body,
+            x,
+            (params["layers"], st["wkv"], st["x_tm"], st["x_cm"]),
+            unroll=cfg.n_layers if cfg.scan_unroll else 1,
+        )
+        new_state["rwkv"] = {"wkv": wkv2, "x_tm": xtm2, "x_cm": xcm2}
+    else:
+
+        def body(h, inp):
+            lp, ck, cv, extra = inp
+            hn = apply_norm(lp["norm1"], h, cfg)
+            attn_out, ck2, cv2 = attention_decode(
+                lp["attn"], hn, ck, cv, pos, cfg, window=cfg.window, sh=sh
+            )
+            outs = {"k": ck2, "v": cv2}
+            if cfg.family == "hybrid":
+                ssm_out, ns = mamba_decode(
+                    lp["mamba"], hn, {"h": extra["mh"], "conv": extra["mc"]}, cfg, sh
+                )
+                h = h + 0.5 * (attn_out + ssm_out)
+                outs["mh"], outs["mc"] = ns["h"], ns["conv"]
+            else:
+                h = h + attn_out
+            if cfg.enc_dec:
+                h = h + cross_attention(
+                    lp["xattn"],
+                    apply_norm(lp["norm_x"], h, cfg),
+                    extra["xk"],
+                    extra["xv"],
+                    cfg,
+                    sh,
+                )
+            hn2 = apply_norm(lp["norm2"], h, cfg)
+            if cfg.is_moe:
+                ff, _ = moe_apply(lp["moe"], hn2, cfg, sh=sh)
+            else:
+                ff = apply_mlp(lp["mlp"], hn2, cfg, sh=sh)
+            return h + ff, outs
+
+        extras: Dict[str, jax.Array] = {}
+        if cfg.family == "hybrid":
+            extras["mh"], extras["mc"] = state["mamba"]["h"], state["mamba"]["conv"]
+        if cfg.enc_dec:
+            extras["xk"], extras["xv"] = state["xk"], state["xv"]
+        x, outs = jax.lax.scan(
+            body,
+            x,
+            (params["layers"], state["k"], state["v"], extras),
+            unroll=cfg.n_layers if cfg.scan_unroll else 1,
+        )
+        new_state["k"], new_state["v"] = outs["k"], outs["v"]
+        if cfg.family == "hybrid":
+            new_state["mamba"] = {"h": outs["mh"], "conv": outs["mc"]}
+        if cfg.enc_dec:
+            new_state["xk"], new_state["xv"] = state["xk"], state["xv"]
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = lm_logits(params["embed"], x, cfg)[:, 0]
+    return logits, new_state

@@ -1,0 +1,331 @@
+"""State-space / linear-recurrence blocks: RWKV-6 (Finch) and Mamba.
+
+RWKV-6 is the attention-free arch (rwkv6-3b); Mamba heads run in parallel
+with attention heads inside hymba layers.  Both are written as a `lax.scan`
+recurrence (the paper-faithful baseline -- O(1) state, exact) plus, for
+RWKV, a chunked MXU-friendly form used as a beyond-paper perf variant
+(`rwkv_impl="chunked"`); the two are allclose-tested against each other.
+
+Decode is a single recurrence step: state in, state out -- this is why the
+ssm/hybrid archs are the ones that run the 500k-context cell.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import trunc_normal
+
+__all__ = [
+    "rwkv_params",
+    "rwkv_train",
+    "rwkv_decode",
+    "rwkv_init_state",
+    "mamba_params",
+    "mamba_train",
+    "mamba_decode",
+    "mamba_init_state",
+]
+
+LORA_DECAY = 64
+LORA_MIX = 32
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 ("Finch"): data-dependent decay linear attention
+# ---------------------------------------------------------------------------
+
+
+def rwkv_params(key, cfg: ModelConfig) -> Dict:
+    D = cfg.d_model
+    H = cfg.n_rwkv_heads
+    hd = D // H
+    ks = jax.random.split(key, 16)
+    dt = cfg.pdtype
+    p = {
+        # token-shift base mixes for r,k,v,w,g
+        "mu": jnp.zeros((5, D), dt),
+        # data-dependent decay lora: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.asarray(
+            jnp.tile(jnp.linspace(-6.0, -1.0, hd), H), dt
+        ),  # per-channel decay base, spread across the head dim
+        "wA": trunc_normal(ks[0], (D, LORA_DECAY), 0.1, dt),
+        "wB": trunc_normal(ks[1], (LORA_DECAY, D), 0.1, dt),
+        "u": trunc_normal(ks[2], (D,), 1.0, dt),  # bonus for the current token
+        "wr": trunc_normal(ks[3], (D, D), 1.0, dt),
+        "wk": trunc_normal(ks[4], (D, D), 1.0, dt),
+        "wv": trunc_normal(ks[5], (D, D), 1.0, dt),
+        "wg": trunc_normal(ks[6], (D, D), 1.0, dt),
+        "wo": trunc_normal(ks[7], (D, D), 1.0, dt),
+        "gn_scale": jnp.ones((D,), dt),  # per-head group norm
+    }
+    return p
+
+
+def _rwkv_inputs(p: Dict, x: jax.Array, x_prev: jax.Array, cfg: ModelConfig):
+    """Token shift + projections.  x: (B, S, D); x_prev: (B, 1, D) carry."""
+    cd = cfg.cdtype
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    xx = shifted - x
+    mu = p["mu"].astype(cd)
+    xr, xk, xv, xw, xg = (x + xx * mu[i] for i in range(5))
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(cd))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(cd))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(cd)).astype(jnp.float32))
+    # data-dependent decay (f32 for stability)
+    lora = jnp.einsum(
+        "bsr,rd->bsd", jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["wA"].astype(cd))).astype(cd),
+        p["wB"].astype(cd),
+    )
+    logw = -jnp.exp(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32))  # < 0
+    # clamp: keeps the chunked form's exp(-cum) factors inside f32 range
+    # (chunk 16 * 4.0 << 88); w >= e^-4 per step is numerically indistinguishable
+    logw = jnp.maximum(logw, -4.0)
+    w = jnp.exp(logw)  # in (0, 1)
+    return r, k, v, g, w, logw
+
+
+def _heads(x: jax.Array, H: int) -> jax.Array:
+    B, S, D = x.shape
+    return x.reshape(B, S, H, D // H)
+
+
+def _group_norm(o: jax.Array, scale: jax.Array, H: int, eps: float = 64e-5) -> jax.Array:
+    """Per-head layer norm (RWKV's GroupNorm over heads)."""
+    B, S, _, hd = o.shape
+    mu = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = (o - mu) * jax.lax.rsqrt(var + eps)
+    return o.reshape(B, S, H * hd) * scale
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int, layers: int) -> Dict:
+    D = cfg.d_model
+    H = cfg.n_rwkv_heads
+    hd = D // H
+    return {
+        "wkv": jnp.zeros((layers, batch, H, hd, hd), jnp.float32),
+        "x_tm": jnp.zeros((layers, batch, 1, D), cfg.cdtype),  # time-mix shift
+        "x_cm": jnp.zeros((layers, batch, 1, D), cfg.cdtype),  # channel-mix shift
+    }
+
+
+def _wkv_scan(r, k, v, w, u, state0):
+    """Exact recurrence.  All (B, S, H, hd); state0 (B, H, hd, hd) f32.
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t ;  o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    """
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, H, hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)  # rank-1 update
+        o_t = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, o_t
+
+    xs = tuple(jnp.moveaxis(a, 1, 0).astype(jnp.float32) for a in (r, k, v, w))
+    S, os_ = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(os_, 0, 1), S  # (B, S, H, hd), final state
+
+
+def _wkv_chunked(r, k, v, w, u, state0, chunk: int = 16):
+    """Chunked parallel form (GLA-style): intra-chunk via masked matmuls on
+    the MXU, inter-chunk via the carried state.  Matches _wkv_scan to ~1e-4.
+    """
+    B, S, H, hd = r.shape
+    if S % chunk:
+        pad = chunk - S % chunk
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    n = r.shape[1] // chunk
+    rs = r.reshape(B, n, chunk, H, hd).astype(jnp.float32)
+    ks = k.reshape(B, n, chunk, H, hd).astype(jnp.float32)
+    vs = v.reshape(B, n, chunk, H, hd).astype(jnp.float32)
+    ws = w.reshape(B, n, chunk, H, hd).astype(jnp.float32)
+    logw = jnp.log(jnp.maximum(ws, 1e-38))
+    cum = jnp.cumsum(logw, axis=2)  # log prod_{s<=t} w_s within chunk
+
+    def chunk_step(S, inp):
+        rc, kc, vc, cumc, logwc = inp  # (B, C, H, hd) each
+        # decay-adjusted operands
+        cum_prev = cumc - logwc  # log prod_{s<t}
+        r_in = rc * jnp.exp(cum_prev)  # queries see state through decay
+        k_dec = kc * jnp.exp(-cumc)  # keys forward-decayed
+        # inter-chunk: r_t · S
+        inter = jnp.einsum("bchk,bhkv->bchv", r_in, S)
+        # intra-chunk: strict lower triangle + bonus diagonal
+        att = jnp.einsum("bchk,bdhk->bhcd", r_in, k_dec)
+        tri = jnp.tril(jnp.ones((chunk, chunk)), -1)
+        att = att * tri[None, None]
+        intra = jnp.einsum("bhcd,bdhv->bchv", att, vc)
+        bonus = jnp.einsum("bchk,bchk->bch", rc, u[None, None] * kc)[..., None] * vc
+        o = inter + intra + bonus
+        # state update: S' = diag(prod w) S + sum_s diag(prod_{>s} w) k_s v_s
+        total = cumc[:, -1]  # (B, H, hd)
+        k_fut = kc * jnp.exp(total[:, None] - cumc)
+        S = jnp.exp(total)[..., None] * S + jnp.einsum("bchk,bchv->bhkv", k_fut, vc)
+        return S, o
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rs, ks, vs, cum, logw))
+    Sf, os_ = jax.lax.scan(chunk_step, state0, xs)
+    o = jnp.moveaxis(os_, 0, 1).reshape(B, n * chunk, H, hd)
+    return o[:, :S], Sf
+
+
+def rwkv_train(
+    p: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: Optional[Dict] = None,
+    *,
+    impl: str = "scan",
+    sh=None,
+) -> Tuple[jax.Array, Dict]:
+    """Time-mix block.  x: (B, S, D) (already normed).  Returns (out, state)."""
+    B, S, D = x.shape
+    H = cfg.n_rwkv_heads
+    hd = D // H
+    x_prev = state["x_tm"] if state else jnp.zeros((B, 1, D), x.dtype)
+    S0 = state["wkv"] if state else jnp.zeros((B, H, hd, hd), jnp.float32)
+    r, k, v, g, w, _ = _rwkv_inputs(p, x, x_prev, cfg)
+    rh, kh, vh, wh = (_heads(a, H) for a in (r, k, v, w))
+    u = _heads(p["u"].astype(jnp.float32)[None, None], H)[0, 0]
+    if impl == "chunked":
+        o, S1 = _wkv_chunked(rh, kh, vh, wh, u, S0)
+    else:
+        o, S1 = _wkv_scan(rh, kh, vh, wh, u, S0)
+    o = _group_norm(o.astype(jnp.float32), p["gn_scale"].astype(jnp.float32), H)
+    o = (o * g).astype(cfg.cdtype)
+    out = jnp.einsum("bsd,de->bse", o, p["wo"].astype(cfg.cdtype))
+    new_state = {"x_tm": x[:, -1:], "wkv": S1}
+    return out, new_state
+
+
+def rwkv_decode(p: Dict, x: jax.Array, state: Dict, cfg: ModelConfig, sh=None):
+    """One-token step; x: (B, 1, D).  O(1) in stream length."""
+    out, ns = rwkv_train(p, x, cfg, state=state, impl="scan", sh=sh)
+    return out, ns
+
+
+def rwkv_channel_params(key, cfg: ModelConfig) -> Dict:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": jnp.zeros((2, D), cfg.pdtype),  # shifts for k and r
+        "wk": trunc_normal(ks[0], (D, F), 1.0, cfg.pdtype),
+        "wv": trunc_normal(ks[1], (F, D), 1.0, cfg.pdtype),
+        "wr": trunc_normal(ks[2], (D, D), 1.0, cfg.pdtype),
+    }
+
+
+def rwkv_channel_mix(p: Dict, x: jax.Array, x_prev: jax.Array, cfg: ModelConfig, sh=None):
+    cd = cfg.cdtype
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    xx = shifted - x
+    mu = p["mu"].astype(cd)
+    xk, xr = x + xx * mu[0], x + xx * mu[1]
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(cd))
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(cd)
+    if sh is not None:
+        k = sh.act_ff(k)
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(cd))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(cd)).astype(jnp.float32))
+    return (r * kv.astype(jnp.float32)).astype(cd), x[:, -1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) -- the SSM half of hymba layers
+# ---------------------------------------------------------------------------
+
+CONV_W = 4
+
+
+def mamba_params(key, cfg: ModelConfig, d_in: Optional[int] = None) -> Dict:
+    D = d_in or cfg.d_model
+    Di = D  # inner width (hymba runs SSM heads parallel to attn; keep = D)
+    N = cfg.ssm_state
+    dt_rank = max(1, math.ceil(D / 16))
+    ks = jax.random.split(key, 6)
+    dt = cfg.pdtype
+    return {
+        "in_proj": trunc_normal(ks[0], (D, 2 * Di), 1.0, dt),
+        "conv_w": trunc_normal(ks[1], (CONV_W, Di), 1.0, dt),
+        "x_proj": trunc_normal(ks[2], (Di, dt_rank + 2 * N), 1.0, dt),
+        "dt_proj": trunc_normal(ks[3], (dt_rank, Di), 1.0, dt),
+        "dt_bias": jnp.asarray(jnp.log(jnp.expm1(jnp.full((Di,), 0.01))), dt),
+        "A_log": jnp.log(
+            jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (Di, 1))
+        ).astype(dt),
+        "D": jnp.ones((Di,), dt),
+        "out_proj": trunc_normal(ks[4], (Di, D), 1.0, dt),
+    }
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, layers: int, d_in: Optional[int] = None) -> Dict:
+    Di = d_in or cfg.d_model
+    N = cfg.ssm_state
+    return {
+        "h": jnp.zeros((layers, batch, Di, N), jnp.float32),
+        "conv": jnp.zeros((layers, batch, CONV_W - 1, Di), jnp.float32),
+    }
+
+
+def _mamba_core(p: Dict, xz: jax.Array, conv_prev: jax.Array, h0: jax.Array, cfg: ModelConfig):
+    """xz: (B, S, 2*Di) after in_proj; returns (y (B,S,Di), h_T, conv_tail)."""
+    Di = xz.shape[-1] // 2
+    N = cfg.ssm_state
+    dt_rank = p["dt_proj"].shape[0]
+    x, z = xz[..., :Di], xz[..., Di:]
+    # causal depthwise conv, width CONV_W, with carried left context
+    xc = jnp.concatenate([conv_prev.astype(x.dtype), x], axis=1)  # (B, S+3, Di)
+    w = p["conv_w"].astype(jnp.float32)
+    S = x.shape[1]
+    y = sum(
+        xc[:, i : i + S].astype(jnp.float32) * w[i][None, None] for i in range(CONV_W)
+    )
+    x = jax.nn.silu(y)
+    proj = jnp.einsum("bsd,de->bse", x.astype(cfg.cdtype), p["x_proj"].astype(cfg.cdtype))
+    dt_in, Bc, Cc = jnp.split(proj.astype(jnp.float32), [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_in, p["dt_proj"].astype(jnp.float32))
+        + p["dt_bias"].astype(jnp.float32)
+    )  # (B, S, Di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (Di, N)
+    dA = jnp.exp(dt[..., None] * A[None, None])  # (B, S, Di, N)
+    dBx = dt[..., None] * Bc[:, :, None, :] * x[..., None]  # (B, S, Di, N)
+
+    def step(h, inp):
+        dA_t, dBx_t, C_t = inp
+        h = dA_t * h + dBx_t
+        y_t = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y_t
+
+    xs = (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBx, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    ys = jnp.moveaxis(ys, 0, 1) + x * p["D"].astype(jnp.float32)[None, None]
+    out = ys * jax.nn.silu(z.astype(jnp.float32))
+    return out.astype(cfg.cdtype), hT, xc[:, -(CONV_W - 1) :].astype(jnp.float32)
+
+
+def mamba_train(
+    p: Dict, x: jax.Array, cfg: ModelConfig, state: Optional[Dict] = None, sh=None
+) -> Tuple[jax.Array, Dict]:
+    B, S, D = x.shape
+    Di = p["out_proj"].shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cfg.cdtype))
+    conv_prev = state["conv"] if state else jnp.zeros((B, CONV_W - 1, Di), jnp.float32)
+    h0 = state["h"] if state else jnp.zeros((B, Di, cfg.ssm_state), jnp.float32)
+    y, hT, conv_tail = _mamba_core(p, xz, conv_prev, h0, cfg)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(cfg.cdtype))
+    return out, {"h": hT, "conv": conv_tail}
+
+
+def mamba_decode(p: Dict, x: jax.Array, state: Dict, cfg: ModelConfig, sh=None):
+    return mamba_train(p, x, cfg, state=state, sh=sh)

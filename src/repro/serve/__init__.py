@@ -1,0 +1,1 @@
+from .decode import ServeConfig, Server, greedy_decode  # noqa: F401

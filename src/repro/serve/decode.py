@@ -1,0 +1,136 @@
+"""Batched serving: prefill + single-token decode against a KV/SSM cache.
+
+``serve_step`` (one new token with a cache of ``cache_len`` history) is the
+function the decode_32k / long_500k dry-run cells lower.  The :class:`Server`
+wraps it with request batching: requests are accumulated into fixed batch
+slots (static shapes), decoded greedily, and retired when EOS or max-new
+tokens is hit -- continuous batching over a static window, which is the
+XLA-friendly formulation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as M
+from ..models.config import ModelConfig
+
+__all__ = ["ServeConfig", "Server", "greedy_decode", "make_serve_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch: int = 8
+    cache_len: int = 1024
+    max_new: int = 32
+    eos: int = 0
+
+
+def make_serve_step(cfg: ModelConfig, sh=None) -> Callable:
+    """(params, state, token (B,)) -> (next_token (B,), logits, state)."""
+
+    def serve_step(params, state, token):
+        logits, state = M.decode_step(params, cfg, state, token, sh)
+        nxt = jnp.argmax(logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)
+        return nxt, logits, state
+
+    return serve_step
+
+
+def greedy_decode(
+    params,
+    cfg: ModelConfig,
+    prompt: jax.Array,  # (B, S0) int32
+    *,
+    max_new: int = 16,
+    cache_len: int = 256,
+    sh=None,
+    extras: Optional[Dict[str, jax.Array]] = None,
+) -> jax.Array:
+    """Prefill by stepping the prompt, then decode greedily.  Returns
+    (B, max_new) generated tokens."""
+    B, S0 = prompt.shape
+    state = M.init_decode_state(cfg, B, cache_len)
+    if cfg.enc_dec:
+        state = M.prefill_memory(params, cfg, extras["frames"], state, sh)
+    step = jax.jit(make_serve_step(cfg, sh))
+    tok = prompt[:, 0]
+    for t in range(1, S0):  # prefill token-by-token (exactness over speed)
+        _, _, state = step(params, state, tok)
+        tok = prompt[:, t]
+    outs = []
+    for _ in range(max_new):
+        tok, _, state = step(params, state, tok)
+        outs.append(tok)
+    return jnp.stack(outs, axis=1)
+
+
+@dataclasses.dataclass
+class _Slot:
+    request_id: Optional[int] = None
+    remaining: int = 0
+    generated: Optional[List[int]] = None
+
+
+class Server:
+    """Continuous batching over a static batch window."""
+
+    def __init__(self, params, cfg: ModelConfig, sc: ServeConfig, sh=None):
+        self.params = params
+        self.cfg = cfg
+        self.sc = sc
+        self.step = jax.jit(make_serve_step(cfg, sh))
+        self.state = M.init_decode_state(cfg, sc.batch, sc.cache_len)
+        self.slots = [_Slot() for _ in range(sc.batch)]
+        self.tokens = np.zeros((sc.batch,), np.int32)
+        self.queue: List[Tuple[int, List[int]]] = []
+        self.done: Dict[int, List[int]] = {}
+        self._next_id = 0
+
+    def submit(self, prompt_tokens: List[int]) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append((rid, list(prompt_tokens)))
+        return rid
+
+    def _admit(self) -> None:
+        for slot_i, slot in enumerate(self.slots):
+            if slot.request_id is None and self.queue:
+                rid, prompt = self.queue.pop(0)
+                slot.request_id = rid
+                slot.remaining = self.sc.max_new
+                slot.generated = []
+                # prefill this slot by feeding its prompt (other slots idle)
+                for t in prompt:
+                    self.tokens[slot_i] = t
+                    self._device_step()
+        # note: per-slot prefill steps the whole batch; idle slots decode
+        # padding (masked out on retirement).  A production server would use
+        # a dedicated prefill kernel; the cells' prefill_32k path lowers the
+        # full-sequence forward for that purpose.
+
+    def _device_step(self) -> None:
+        nxt, _, self.state = self.step(self.params, self.state, jnp.asarray(self.tokens))
+        self._last = np.asarray(nxt)
+
+    def run(self, n_steps: int) -> None:
+        for _ in range(n_steps):
+            self._admit()
+            if all(s.request_id is None for s in self.slots):
+                return
+            self._device_step()
+            for i, slot in enumerate(self.slots):
+                if slot.request_id is None:
+                    continue
+                tok = int(self._last[i])
+                slot.generated.append(tok)
+                self.tokens[i] = tok
+                slot.remaining -= 1
+                if slot.remaining <= 0 or tok == self.sc.eos:
+                    self.done[slot.request_id] = slot.generated
+                    self.slots[i] = _Slot()

@@ -1,0 +1,1 @@
+from .specs import ShardingPolicy, make_policy  # noqa: F401

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run on the single real CPU device -- the 512-device fake topology is
+# ONLY for the dry-run subprocesses (spec: never set XLA_FLAGS globally)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,154 @@
+"""Property-based tests (hypothesis) for the DMM system invariants.
+
+Invariants from the paper:
+  P1  Alg.2 then decompaction is the identity on any valid 1:1 matrix.
+  P2  Alg.3 then Alg.4 is the identity (the DUSB replay reconstruction).
+  P3  Alg.1 and Alg.6 agree on every message (after densification).
+  P4  Both dense sets only shrink representations: |DUSB| <= |DPM| <= nnz.
+  P5  Alg.5 set updates == recompaction of the updated full matrix.
+  P6  Tensorised apply (gather) == one-hot matmul == python Alg.6.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.dmm import (
+    MappingMatrix,
+    Message,
+    auto_update_dpm,
+    decompact_dpm,
+    decompact_dusb,
+    dpm_size,
+    dusb_size,
+    map_message_dense,
+    map_message_sparse,
+    transform_to_dpm,
+    transform_to_dusb,
+)
+from repro.core.dmm_jax import apply_compacted, apply_onehot, compile_dpm
+from repro.core.synthetic import ScenarioConfig, build_scenario
+
+scenario_configs = st.builds(
+    ScenarioConfig,
+    n_schemas=st.integers(1, 6),
+    versions_per_schema=st.integers(1, 6),
+    attrs_per_version=st.integers(1, 8),
+    n_entities=st.integers(1, 3),
+    cdm_attrs=st.integers(1, 10),
+    p_drop=st.floats(0.0, 0.5),
+    p_add=st.floats(0.0, 0.8),
+    map_density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 10_000),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(scenario_configs)
+def test_p1_dpm_roundtrip(cfg):
+    sc = build_scenario(cfg)
+    dpm = transform_to_dpm(sc.matrix)
+    assert np.array_equal(decompact_dpm(dpm, sc.registry).M, sc.matrix.M)
+
+
+@settings(max_examples=40, deadline=None)
+@given(scenario_configs)
+def test_p2_dusb_roundtrip(cfg):
+    sc = build_scenario(cfg)
+    dusb = transform_to_dusb(sc.matrix)
+    assert np.array_equal(decompact_dusb(dusb, sc.registry).M, sc.matrix.M)
+
+
+@settings(max_examples=30, deadline=None)
+@given(scenario_configs, st.integers(0, 1000), st.floats(0.0, 1.0))
+def test_p3_alg1_equals_alg6(cfg, msg_seed, null_rate):
+    sc = build_scenario(cfg)
+    reg = sc.registry
+    rng = np.random.default_rng(msg_seed)
+    o = reg.domain.schema_ids()[int(rng.integers(len(reg.domain.schema_ids())))]
+    vs = reg.domain.versions(o)
+    v = vs[int(rng.integers(len(vs)))]
+    sv = reg.domain.get(o, v)
+    payload = {
+        a.uid: (None if rng.random() < null_rate else float(rng.integers(1, 100)))
+        for a in sv.attributes
+    }
+    msg = Message(state=reg.state, schema_id=o, version=v, payload=payload)
+    dpm = transform_to_dpm(sc.matrix)
+    dense1 = {
+        (m.schema_id, m.version): m.payload
+        for m in (x.densify() for x in map_message_sparse(sc.matrix, msg))
+        if m.payload
+    }
+    dense6 = {
+        (m.schema_id, m.version): m.payload
+        for m in map_message_dense(dpm, reg, msg.densify())
+    }
+    assert dense1 == dense6
+
+
+@settings(max_examples=40, deadline=None)
+@given(scenario_configs)
+def test_p4_sizes_shrink(cfg):
+    sc = build_scenario(cfg)
+    dpm = transform_to_dpm(sc.matrix)
+    dusb = transform_to_dusb(sc.matrix)
+    nnz = sc.matrix.nnz()
+    assert dpm_size(dpm) == nnz  # DPM stores exactly the 1-elements
+    # DUSB stores each unique run once: element entries never exceed the
+    # matrix 1s; record count adds at most one null terminator per run
+    stored_elements = sum(len(b) for seq in dusb.values() for _, b in seq)
+    n_null_records = sum(1 for seq in dusb.values() for _, b in seq if not b)
+    assert stored_elements <= nnz
+    assert dusb_size(dusb) <= stored_elements + n_null_records
+
+
+@settings(max_examples=25, deadline=None)
+@given(scenario_configs, st.integers(0, 3))
+def test_p5_update_equals_recompaction(cfg, which_schema):
+    sc = build_scenario(cfg)
+    reg = sc.registry
+    dpm = transform_to_dpm(sc.matrix)
+    sids = reg.domain.schema_ids()
+    o = sids[which_schema % len(sids)]
+    v = reg.domain.latest_version(o)
+    keep = [a.name for a in reg.domain.get(o, v).attributes]
+    reg.evolve(reg.domain, o, keep=keep, add=["fresh"])
+    dpm2, _ = auto_update_dpm(dpm, reg, ("added_domain", o, v + 1))
+    rebuilt = transform_to_dpm(decompact_dpm(dpm2, reg))
+    assert rebuilt == {k: e for k, e in dpm2.items() if e}
+
+
+@settings(max_examples=20, deadline=None)
+@given(scenario_configs, st.integers(0, 1000))
+def test_p6_tensor_apply_matches_python(cfg, seed):
+    sc = build_scenario(cfg)
+    reg = sc.registry
+    dpm = transform_to_dpm(sc.matrix)
+    compiled = compile_dpm(dpm, reg)
+    rng = np.random.default_rng(seed)
+    for (o, v), blocks in list(compiled.by_column.items())[:3]:
+        sv = reg.domain.get(o, v)
+        n_in = len(sv.attributes)
+        vals = rng.integers(1, 100, size=(2, n_in)).astype(np.float32)
+        mask = (rng.random((2, n_in)) < 0.7).astype(np.int8)
+        payload = {
+            a.uid: (float(vals[0, k]) if mask[0, k] else None)
+            for k, a in enumerate(sv.attributes)
+        }
+        msg = Message(state=reg.state, schema_id=o, version=v, payload=payload)
+        outs = {
+            (m.schema_id, m.version): m.payload
+            for m in map_message_dense(dpm, reg, msg.densify())
+        }
+        for blk in blocks:
+            gv, gm = apply_compacted(blk, jnp.asarray(vals), jnp.asarray(mask) != 0)
+            ov, om = apply_onehot(blk, jnp.asarray(vals), jnp.asarray(mask) != 0)
+            assert np.allclose(np.asarray(gv), np.asarray(ov), atol=1e-5)
+            assert np.array_equal(np.asarray(gm), np.asarray(om))
+            want = outs.get((blk.key[2], blk.key[3]), {})
+            out_uids = reg.range.get(blk.key[2], blk.key[3]).uids
+            for k, uid in enumerate(out_uids):
+                got = float(gv[0, k]) if bool(gm[0, k]) else None
+                assert got == want.get(uid), (blk.key, uid)

@@ -1,0 +1,141 @@
+"""ETL pipeline tests: CDC sources, METL app semantics, batcher."""
+
+import numpy as np
+import pytest
+
+from repro.core.dmm import transform_to_dpm
+from repro.core.registry import StaleStateError
+from repro.core.state import StateCoordinator
+from repro.core.synthetic import ScenarioConfig, build_scenario
+from repro.etl import CanonicalBatcher, EventSource, METLApp
+from repro.etl.batcher import make_token_batch
+import repro.configs as C
+
+
+@pytest.fixture
+def pipeline():
+    sc = build_scenario(ScenarioConfig(seed=5))
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    app = METLApp(coord)
+    src = EventSource(sc.registry, seed=0, p_duplicate=0.1)
+    return sc, coord, app, src
+
+
+class TestEventSource:
+    def test_deterministic_slices(self, pipeline):
+        sc, _, _, src = pipeline
+        a = src.slice(100, 50)
+        b = src.slice(100, 50)
+        assert [e.key for e in a] == [e.key for e in b]
+        assert [e.after for e in a] == [e.after for e in b]
+
+    def test_duplicates_share_key(self, pipeline):
+        _, _, _, src = pipeline
+        evs = src.slice(0, 500)
+        keys = [e.key for e in evs]
+        assert len(keys) > len(set(keys))  # at-least-once produced dups
+
+    def test_delete_events_map_before_image(self, pipeline):
+        _, _, _, src = pipeline
+        evs = [e for e in src.slice(0, 500) if e.op == "d"]
+        assert evs, "no delete events generated"
+        for e in evs[:5]:
+            assert e.after is None and e.before is not None
+            assert e.message().payload == e.before
+
+
+class TestMETLApp:
+    def test_dedup(self, pipeline):
+        _, _, app, src = pipeline
+        evs = src.slice(0, 300)
+        app.consume(evs)
+        n_unique = len({e.key for e in evs})
+        assert app.stats["duplicates"] == len(evs) - n_unique
+        # mapped + empty == unique (every unique event mapped or empty)
+        assert app.stats["mapped"] + app.stats["empty"] == n_unique
+
+    def test_tensor_path_matches_scalar_path(self, pipeline):
+        sc, coord, app, src = pipeline
+        evs = [e for e in src.slice(0, 60)]
+        uniq, seen = [], set()
+        for e in evs:
+            if e.key not in seen:
+                uniq.append(e)
+                seen.add(e.key)
+        rows = app.consume(uniq)
+        msgs = app.consume_scalar(uniq)
+        # group scalar outputs: key -> {(r, w): payload}
+        got = {}
+        for ((r, w), vals, mask, key) in rows:
+            sv = coord.registry.range.get(r, w)
+            payload = {
+                uid: float(vals[i])
+                for i, uid in enumerate(sv.uids)
+                if mask[i]
+            }
+            got.setdefault(key, {})[(r, w)] = payload
+        # scalar messages don't carry the key; compare multiset of payloads
+        scalar_payloads = sorted(
+            tuple(sorted(m.payload.items())) for m in msgs
+        )
+        tensor_payloads = sorted(
+            tuple(sorted(p.items())) for d in got.values() for p in d.values()
+        )
+        assert scalar_payloads == tensor_payloads
+
+    def test_strict_state_raises_on_stale(self):
+        sc = build_scenario(ScenarioConfig(seed=6))
+        coord = StateCoordinator(sc.registry, sc.dpm)
+        app = METLApp(coord, strict_state=True)
+        src = EventSource(sc.registry, seed=0, p_duplicate=0.0)
+        evs = src.slice(0, 5)
+        evs[2].state -= 1  # simulate an out-of-sync component
+        with pytest.raises(StaleStateError):
+            app.consume(evs)
+
+    def test_eviction_and_refresh_on_state_change(self, pipeline):
+        sc, coord, app, src = pipeline
+        o = sc.registry.domain.schema_ids()[0]
+        v = sc.registry.domain.latest_version(o)
+
+        def mutate(reg):
+            keep = [a.name for a in reg.domain.get(o, v).attributes]
+            reg.evolve(reg.domain, o, keep=keep)
+            return ("added_domain", o, v + 1)
+
+        coord.apply_update(mutate)
+        assert app._compiled is None  # cache evicted (Caffeine analogue)
+        app.consume(src.slice(1000, 20))  # auto-refresh
+        assert app.state == coord.registry.state
+
+
+class TestBatcher:
+    def test_packs_fixed_shapes(self, pipeline):
+        sc, _, app, src = pipeline
+        b = CanonicalBatcher(vocab=512, seq_len=32, batch_size=4)
+        pos = 0
+        while not b.ready():
+            b.add_rows(app.consume(src.slice(pos, 200)))
+            pos += 200
+        batch = b.next_batch()
+        assert batch["tokens"].shape == (4, 32)
+        assert batch["labels"].shape == (4, 32)
+        assert (batch["tokens"] >= 1).all() and (batch["tokens"] < 512).all()
+        # next-token alignment
+        assert (batch["labels"][:, :-1] == batch["tokens"][:, 1:]).all()
+
+    def test_make_token_batch_deterministic(self):
+        cfg = C.get_smoke("olmo_1b")
+        a = make_token_batch(cfg, 4, 16, step=3, shard=1, seed=9)
+        b = make_token_batch(cfg, 4, 16, step=3, shard=1, seed=9)
+        c = make_token_batch(cfg, 4, 16, step=4, shard=1, seed=9)
+        assert (a["tokens"] == b["tokens"]).all()
+        assert not (a["tokens"] == c["tokens"]).all()
+
+    def test_modality_extras(self):
+        cfg = C.get_smoke("whisper_tiny")
+        b = make_token_batch(cfg, 2, 8)
+        assert b["frames"].shape == (2, cfg.enc_seq, cfg.d_model)
+        cfg = C.get_smoke("internvl2_1b")
+        b = make_token_batch(cfg, 2, 8)
+        assert b["patches"].shape == (2, cfg.frontend_tokens, cfg.d_model)

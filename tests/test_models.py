@@ -1,0 +1,150 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward +
+train step + decode step on CPU, asserting shapes and finiteness."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.etl.batcher import make_token_batch
+from repro.models import model as M
+from repro.train.loop import TrainConfig, make_train_step
+from repro.train.optimizer import AdamWConfig, adamw_init
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=16, seed=0):
+    return {k: jnp.asarray(v) for k, v in make_token_batch(cfg, b, s, seed=seed).items()}
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = C.get_smoke(arch)
+    params = M.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    logits, aux = M.forward(params, cfg, batch)
+    S = batch["tokens"].shape[1] + (cfg.frontend_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, S, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+def test_train_step_updates_params(arch):
+    cfg = C.get_smoke(arch)
+    params = M.init_params(cfg, KEY)
+    tc = TrainConfig(batch=2, seq=16, opt=AdamWConfig(lr=1e-3, warmup_steps=1))
+    opt_state = adamw_init(params, tc.opt)
+    step = jax.jit(make_train_step(cfg, tc))
+    p2, o2, metrics = step(params, opt_state, _batch(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # at least one leaf moved
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2))
+    )
+    assert moved
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+def test_decode_step_all_archs(arch):
+    cfg = C.get_smoke(arch)
+    params = M.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    state = M.init_decode_state(cfg, 2, 32)
+    if cfg.enc_dec:
+        state = M.prefill_memory(params, cfg, batch["frames"], state)
+    logits, state2 = M.decode_step(params, cfg, state, batch["tokens"][:, 0])
+    assert logits.shape == (2, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert int(state2["pos"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["olmo_1b", "stablelm_1_6b", "rwkv6_3b", "hymba_1_5b"])
+def test_decode_matches_teacher_forcing(arch):
+    """Streaming decode logits == full-sequence forward logits (same tokens).
+
+    The strongest correctness check for the cache machinery: every arch
+    family's cache (KV / rolling window / rwkv state / mamba state) must
+    reproduce the training-time forward exactly.
+    """
+    cfg = C.get_smoke(arch)
+    params = M.init_params(cfg, KEY)
+    S = 12
+    if cfg.window:  # keep inside one window so semantics agree
+        assert cfg.window >= S
+    batch = _batch(cfg, b=2, s=S)
+    full_logits, _ = M.forward(params, cfg, batch)
+    state = M.init_decode_state(cfg, 2, max(S, cfg.window or S))
+    got = []
+    for t in range(S):
+        logits, state = M.decode_step(params, cfg, state, batch["tokens"][:, t])
+        got.append(np.asarray(logits, np.float32))
+    got = np.stack(got, axis=1)
+    want = np.asarray(full_logits, np.float32)
+    np.testing.assert_allclose(got, want, atol=5e-2, rtol=5e-2)
+
+
+def test_sliding_window_restricts_attention():
+    """Tokens beyond the window must not influence the output."""
+    cfg = C.get_smoke("hymba_1_5b").replace(window=4, family="dense", ssm_state=0)
+    # pure windowed attention (drop the ssm path for a clean check)
+    params = M.init_params(cfg, KEY)
+    b1 = _batch(cfg, b=1, s=12, seed=0)
+    b2 = {k: np.asarray(v).copy() for k, v in b1.items()}
+    b2["tokens"][0, 0] = (b2["tokens"][0, 0] + 7) % cfg.vocab  # outside window of last pos
+    l1, _ = M.forward(params, cfg, b1)
+    l2, _ = M.forward(params, cfg, {k: jnp.asarray(v) for k, v in b2.items()})
+    # last position attends only to [8..11]; token 0 must not matter
+    np.testing.assert_allclose(
+        np.asarray(l1)[0, -1].astype(np.float32),
+        np.asarray(l2)[0, -1].astype(np.float32),
+        atol=1e-5,
+    )
+    # but an early position *does* change
+    assert not np.allclose(
+        np.asarray(l1)[0, 1].astype(np.float32), np.asarray(l2)[0, 1].astype(np.float32)
+    )
+
+
+def test_vocab_padding_masked_in_loss():
+    cfg = C.get_smoke("whisper_tiny")  # vocab 512 -> padded 512 (aligned)
+    assert cfg.vocab_padded % 256 == 0
+    full = C.get("whisper_tiny")
+    assert full.vocab_padded == 51968  # 51865 rounded to 256
+    assert full.vocab_padded % 16 == 0  # shards over the model axis
+
+
+def test_param_counts_match_published():
+    expect = {
+        "olmo_1b": 1.18e9, "llama3_405b": 405.9e9, "phi3_medium_14b": 14.7e9,
+        "stablelm_1_6b": 1.6e9, "rwkv6_3b": 3.1e9, "hymba_1_5b": 1.4e9,
+        "qwen3_moe_30b_a3b": 30.1e9, "dbrx_132b": 131.6e9, "internvl2_1b": 0.49e9,
+        "whisper_tiny": 0.07e9,
+    }
+    for arch, n in expect.items():
+        got = C.get(arch).param_count()
+        assert abs(got - n) / n < 0.05, (arch, got, n)
+    # MoE active counts
+    assert abs(C.get("qwen3_moe_30b_a3b").active_param_count() - 2.9e9) / 2.9e9 < 0.1
+
+
+@pytest.mark.parametrize("impl", ["chunked", "pallas"])
+@pytest.mark.parametrize("arch", ["llama3_405b", "hymba_1_5b", "whisper_tiny"])
+def test_alt_attention_matches_dense(arch, impl):
+    """Flash-style online-softmax attention (jnp-chunked and Pallas-kernel
+    paths) == dense attention: the perf optimizations must be pure
+    re-schedules, not semantic changes.  (hymba is windowed, so the pallas
+    path falls back to chunked there -- still must agree.)"""
+    cfg_d = C.get_smoke(arch)
+    cfg_c = cfg_d.replace(attn_impl=impl)
+    params = M.init_params(cfg_d, KEY)
+    batch = _batch(cfg_d, b=2, s=32)
+    l_d, _ = M.forward(params, cfg_d, batch)
+    l_c, _ = M.forward(params, cfg_c, batch)
+    np.testing.assert_allclose(
+        np.asarray(l_d, np.float32), np.asarray(l_c, np.float32), atol=5e-2, rtol=5e-2
+    )

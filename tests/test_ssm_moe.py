@@ -1,0 +1,134 @@
+"""Family-specific numerics: RWKV chunked==scan, MoE impl equivalence."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.models import moe as MOE
+from repro.models import ssm
+from repro.models.config import ModelConfig
+
+KEY = jax.random.PRNGKey(7)
+
+
+class TestRWKV:
+    def _setup(self, B=2, S=48, D=64):
+        cfg = C.get_smoke("rwkv6_3b").replace(d_model=D)
+        p = ssm.rwkv_params(KEY, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, S, D), jnp.float32) * 0.5
+        return cfg, p, x.astype(cfg.cdtype)
+
+    def test_chunked_matches_scan(self):
+        cfg, p, x = self._setup()
+        o1, s1 = ssm.rwkv_train(p, x, cfg, impl="scan")
+        o2, s2 = ssm.rwkv_train(p, x, cfg, impl="chunked")
+        np.testing.assert_allclose(
+            np.asarray(o1, np.float32), np.asarray(o2, np.float32), atol=2e-2, rtol=2e-2
+        )
+        np.testing.assert_allclose(
+            np.asarray(s1["wkv"]), np.asarray(s2["wkv"]), atol=2e-3, rtol=2e-3
+        )
+
+    def test_chunked_matches_scan_unaligned_length(self):
+        cfg, p, x = self._setup(S=37)  # not a multiple of the chunk
+        o1, _ = ssm.rwkv_train(p, x, cfg, impl="scan")
+        o2, _ = ssm.rwkv_train(p, x, cfg, impl="chunked")
+        np.testing.assert_allclose(
+            np.asarray(o1, np.float32), np.asarray(o2, np.float32), atol=2e-2, rtol=2e-2
+        )
+
+    def test_streaming_state_equals_batch(self):
+        """Processing [0:S] == processing [0:k] then [k:S] with carried state."""
+        cfg, p, x = self._setup(S=32)
+        o_full, s_full = ssm.rwkv_train(p, x, cfg, impl="scan")
+        o_a, s_a = ssm.rwkv_train(p, x[:, :20], cfg, impl="scan")
+        o_b, s_b = ssm.rwkv_train(p, x[:, 20:], cfg, state=s_a, impl="scan")
+        np.testing.assert_allclose(
+            np.asarray(o_full[:, 20:], np.float32),
+            np.asarray(o_b, np.float32),
+            atol=1e-2, rtol=1e-2,
+        )
+        np.testing.assert_allclose(
+            np.asarray(s_full["wkv"]), np.asarray(s_b["wkv"]), atol=1e-3, rtol=1e-3
+        )
+
+    def test_decay_clamp_keeps_chunked_finite(self):
+        cfg, p, x = self._setup(S=64)
+        # push the decay lora hard: worst case for exp(-cum) factors
+        p = dict(p, w0=jnp.full_like(p["w0"], 0.5))
+        o, _ = ssm.rwkv_train(p, x, cfg, impl="chunked")
+        assert np.isfinite(np.asarray(o, np.float32)).all()
+
+
+class TestMamba:
+    def test_streaming_equals_batch(self):
+        cfg = C.get_smoke("hymba_1_5b")
+        D = cfg.d_model
+        p = ssm.mamba_params(KEY, cfg)
+        x = (jax.random.normal(jax.random.PRNGKey(2), (2, 24, D)) * 0.5).astype(cfg.cdtype)
+        o_full, s_full = ssm.mamba_train(p, x, cfg)
+        o_a, s_a = ssm.mamba_train(p, x[:, :11], cfg)
+        o_b, s_b = ssm.mamba_train(p, x[:, 11:], cfg, state=s_a)
+        np.testing.assert_allclose(
+            np.asarray(o_full[:, 11:], np.float32),
+            np.asarray(o_b, np.float32),
+            atol=2e-2, rtol=2e-2,
+        )
+        np.testing.assert_allclose(
+            np.asarray(s_full["h"]), np.asarray(s_b["h"]), atol=1e-3, rtol=1e-3
+        )
+
+
+class TestMoE:
+    def _cfg(self, impl):
+        return C.get_smoke("qwen3_moe_30b_a3b").replace(
+            moe_impl=impl, capacity_factor=8.0  # no drops -> impls must agree
+        )
+
+    def test_dense_equals_dmm_no_drops(self):
+        cfg_d = self._cfg("dense")
+        cfg_g = self._cfg("dmm")
+        p = MOE.moe_params(KEY, cfg_d)
+        x = (jax.random.normal(jax.random.PRNGKey(3), (2, 16, cfg_d.d_model)) * 0.5).astype(
+            cfg_d.cdtype
+        )
+        o_d, aux_d = MOE.moe_apply(p, x, cfg_d)
+        o_g, aux_g = MOE.moe_apply(p, x, cfg_g)
+        np.testing.assert_allclose(
+            np.asarray(o_d, np.float32), np.asarray(o_g, np.float32), atol=2e-2, rtol=2e-2
+        )
+        np.testing.assert_allclose(float(aux_d), float(aux_g), rtol=1e-3)
+
+    def test_capacity_drops_are_deterministic(self):
+        cfg = self._cfg("dense").replace(capacity_factor=0.25)
+        p = MOE.moe_params(KEY, cfg)
+        x = (jax.random.normal(jax.random.PRNGKey(4), (1, 32, cfg.d_model))).astype(cfg.cdtype)
+        o1, _ = MOE.moe_apply(p, x, cfg)
+        o2, _ = MOE.moe_apply(p, x, cfg)
+        np.testing.assert_allclose(np.asarray(o1, np.float32), np.asarray(o2, np.float32))
+
+    def test_aux_loss_balanced_router_is_one(self):
+        """Perfectly uniform router probs give aux loss == E * k/E/k * ... == 1."""
+        cfg = self._cfg("dense")
+        E = cfg.n_experts
+        T, k = 64, cfg.top_k
+        probs = jnp.full((T, E), 1.0 / E)
+        experts = jnp.stack([jnp.arange(T) % E] * k, axis=-1) % E
+        # frac is uniform by construction when T % E == 0
+        loss = MOE.router_aux_loss(probs, experts, cfg)
+        assert abs(float(loss) - 1.0) < 1e-5
+
+    def test_moe_grads_flow_to_experts(self):
+        cfg = self._cfg("dense")
+        p = MOE.moe_params(KEY, cfg)
+        x = (jax.random.normal(jax.random.PRNGKey(5), (1, 16, cfg.d_model))).astype(cfg.cdtype)
+
+        def loss(p):
+            o, aux = MOE.moe_apply(p, x, cfg)
+            return jnp.sum(o.astype(jnp.float32) ** 2) + aux
+
+        g = jax.grad(loss)(p)
+        assert float(jnp.abs(g["router"]).sum()) > 0
+        assert float(jnp.abs(g["w_in"].astype(jnp.float32)).sum()) > 0

@@ -1,0 +1,56 @@
+"""Vocabulary remapping (DMM block applied to parameters): kept tokens keep
+their behaviour after checkpoint surgery."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.core.vocab_remap import remap_vocab_params, vocab_map_from_names
+from repro.models import model as M
+
+
+def test_vocab_map_from_names():
+    src = vocab_map_from_names(["a", "b", "c"], ["c", "x", "a"])
+    np.testing.assert_array_equal(src, [2, -1, 0])
+
+
+def test_kept_tokens_logits_invariant():
+    cfg = C.get_smoke("olmo_1b")  # tied embeddings: single table remap
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    # new vocab: permutation of the old one with a few fresh slots
+    rng = np.random.default_rng(0)
+    V = cfg.vocab
+    old_names = [f"t{i}" for i in range(V)]
+    perm = rng.permutation(V)
+    new_names = [old_names[p] for p in perm[: V - 8]] + [f"fresh{i}" for i in range(8)]
+    src = vocab_map_from_names(old_names, new_names)
+    params2 = remap_vocab_params(params, src, cfg, cfg)
+
+    # a sequence in old token ids, and its image under the remap
+    old_to_new = {int(s): q for q, s in enumerate(src) if s >= 0}
+    seq_old = np.asarray([perm[i] for i in range(12)], np.int32)  # all kept
+    seq_new = np.asarray([old_to_new[t] for t in seq_old], np.int32)
+    batch_old = {"tokens": jnp.asarray(seq_old[None]), "labels": jnp.asarray(seq_old[None])}
+    batch_new = {"tokens": jnp.asarray(seq_new[None]), "labels": jnp.asarray(seq_new[None])}
+
+    l_old, _ = M.forward(params, cfg, batch_old)
+    l_new, _ = M.forward(params2, cfg, batch_new)
+    # logit of kept token q in the new model == logit of src[q] in the old
+    lo = np.asarray(l_old, np.float32)[0]
+    ln = np.asarray(l_new, np.float32)[0]
+    for q, s in list(old_to_new.items())[:64]:
+        np.testing.assert_allclose(ln[:, s], lo[:, q], atol=1e-3, rtol=1e-3)
+
+
+def test_fresh_tokens_zero_initialised():
+    cfg = C.get_smoke("llama3_405b")  # untied: remaps head too
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    V = cfg.vocab
+    src = vocab_map_from_names([f"t{i}" for i in range(V)], [f"t{i}" for i in range(V - 4)] + [f"f{i}" for i in range(4)])
+    params2 = remap_vocab_params(params, src, cfg, cfg)
+    tok = np.asarray(params2["embed"]["tok"], np.float32)
+    assert np.all(tok[V - 4 : V] == 0)
+    head = np.asarray(params2["embed"]["head"], np.float32)
+    assert np.all(head[:, V - 4 : V] == 0)
