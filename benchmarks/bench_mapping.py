@@ -2,9 +2,16 @@
 
 The paper measures 39 ms mean (10-20 ms warm) per CDC event on the JVM
 microservice.  Hardware differs; the comparable numbers are (a) the absolute
-per-event cost of the compacted-set formulation and (b) the A/B between the
+per-event cost of the compacted-set formulation, (b) the A/B between the
 DMM gather path and the baseline matrix (one-hot matmul) path -- the paper's
-Algorithm 6 vs Algorithm 1 story -- plus the Pallas kernel variants.
+Algorithm 6 vs Algorithm 1 story -- plus the Pallas kernel variants, and
+(c) the **fused-engine A/B**: `METLApp` consume through the legacy
+one-dispatch-per-block path vs the fused one-dispatch-per-chunk path
+(events/s and device-dispatch counts for each).
+
+Standalone smoke entry point (used by scripts/ci.sh):
+
+    PYTHONPATH=src python benchmarks/bench_mapping.py --smoke
 """
 
 from __future__ import annotations
@@ -23,12 +30,32 @@ from repro.kernels import ops
 from common import bench
 
 
-def run() -> list:
+def _consume_bench(app: METLApp, events, *, warmup: int = 1, iters: int = 5):
+    """Time repeated consume of one chunk, resetting dedup between calls
+    (otherwise every iteration after the first measures the dedup-drop path).
+    Returns (us_per_call, device dispatches per chunk)."""
+    def call():
+        app._seen.clear()
+        return app.consume(events)
+
+    us = bench(call, warmup=warmup, iters=iters)
+    before = app.stats["dispatches"]
+    call()
+    dispatches = app.stats["dispatches"] - before
+    return us, dispatches
+
+
+def run(smoke: bool = False) -> list:
     rows = []
-    sc = build_scenario(
-        ScenarioConfig(n_schemas=40, versions_per_schema=10, attrs_per_version=10,
-                       n_entities=10, cdm_attrs=25, seed=11)
-    )
+    if smoke:
+        cfg = ScenarioConfig(n_schemas=4, versions_per_schema=2, attrs_per_version=6,
+                             n_entities=2, cdm_attrs=8, seed=11)
+        B, n_events, iters = 64, 64, 2
+    else:
+        cfg = ScenarioConfig(n_schemas=40, versions_per_schema=10, attrs_per_version=10,
+                             n_entities=10, cdm_attrs=25, seed=11)
+        B, n_events, iters = 1024, 512, 5
+    sc = build_scenario(cfg)
     reg = sc.registry
     compiled = compile_dpm(sc.dpm, reg)
 
@@ -45,7 +72,6 @@ def run() -> list:
     rows.append(("mapping/alg6_dense_python_per_event", us, "DMM Algorithm 6"))
 
     # -- batched tensor path (the production device path) --------------------
-    B = 1024
     n_in = len(sv.attributes)
     vals = jnp.asarray(rng.normal(size=(B, n_in)).astype(np.float32))
     mask = jnp.asarray((rng.random((B, n_in)) < 0.75).astype(np.int8))
@@ -56,11 +82,36 @@ def run() -> list:
         us = bench(f, vals, mask)
         rows.append((f"mapping/batched_{label}", us, f"{us/B:.3f} us/event, B={B}"))
 
-    # -- end-to-end METL app throughput ---------------------------------------
+    # -- end-to-end METL app: per-block vs fused A/B --------------------------
     coord = StateCoordinator(reg, sc.dpm)
-    app = METLApp(coord)
     src = EventSource(reg, seed=1)
-    events = src.slice(0, 512)
-    us = bench(lambda: app.consume(events), warmup=1, iters=5)
-    rows.append(("mapping/metl_app_512_events", us, f"{us/512:.1f} us/event end-to-end"))
+    events = src.slice(0, n_events)
+
+    app_blocks = METLApp(coord, engine="blocks")
+    us_blocks, disp_blocks = _consume_bench(app_blocks, events, iters=iters)
+    rows.append((
+        f"mapping/metl_consume_perblock_{n_events}ev",
+        us_blocks,
+        f"{n_events / (us_blocks / 1e6):.0f} events/s, {disp_blocks} dispatches/chunk",
+    ))
+
+    app_fused = METLApp(coord, engine="fused")
+    us_fused, disp_fused = _consume_bench(app_fused, events, iters=iters)
+    rows.append((
+        f"mapping/metl_consume_fused_{n_events}ev",
+        us_fused,
+        f"{n_events / (us_fused / 1e6):.0f} events/s, {disp_fused} dispatch/chunk, "
+        f"{us_blocks / us_fused:.1f}x vs per-block",
+    ))
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny shapes, CI-sized")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(smoke=args.smoke):
+        print(f"{name},{us:.1f},{derived}", flush=True)

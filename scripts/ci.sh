@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 gate + perf smoke.  Run from anywhere:
+#
+#     bash scripts/ci.sh
+#
+# 1. the repo's tier-1 test suite (ROADMAP.md);
+# 2. a tiny-shape run of the mapping benchmark so the fused-engine perf
+#    path (kernel, dispatcher, consume) can't rot silently even when no
+#    test exercises the timing harness.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== benchmark smoke (fused mapping engine) =="
+python benchmarks/bench_mapping.py --smoke

@@ -27,6 +27,24 @@ Two apply paths are provided:
 
 The Pallas kernel realisation of :func:`apply_compacted` is
 :mod:`repro.kernels.masked_gather`.
+
+On top of the per-block form sits the **fused engine**: :class:`FusedDMM`
+(built by :func:`compile_fused`) flattens *every* compacted block of the
+state-``i`` DPM into device-resident tables so a whole heterogeneous event
+chunk maps in ONE device dispatch (:func:`repro.kernels.ops.dmm_apply_fused`
+over :mod:`repro.kernels.segmented_gather`):
+
+    src2d      (n_blocks_pad, W) int32   all block index vectors, stacked in
+               column order and right-padded with -1 to W = max(n_out_pad)
+    routes     block t emits to business entity routes[t] = (r, w)
+    n_out      true (unpadded) output width per block
+    columns    (o, v) -> FusedColumn: the column super-set iDCPM_v^o as
+               global block ids plus the uid -> payload-slot lookup used for
+               vectorised densification
+
+Batch-shape bucketing (:func:`bucket_rows`, powers of two) keeps the set of
+operand shapes small so the jit cache is effectively keyed on (state,
+bucketed batch shape) and steady-state consume chunks never retrace.
 """
 
 from __future__ import annotations
@@ -43,20 +61,38 @@ from .registry import Registry
 
 __all__ = [
     "LANE",
+    "SUBLANE",
     "pad_to_lane",
+    "bucket_rows",
     "CompactedBlockMap",
     "compile_block",
     "compile_dpm",
+    "compile_fused",
     "apply_compacted",
     "apply_onehot",
     "CompiledDMM",
+    "FusedColumn",
+    "FusedDMM",
 ]
 
 LANE = 128  # TPU vector lane width; last-dim tiles must be multiples of this
+SUBLANE = 8  # second-minor tile width; sublane axes pad to multiples of this
 
 
 def pad_to_lane(n: int, lane: int = LANE) -> int:
     return max(lane, -(-n // lane) * lane)
+
+
+def bucket_rows(n: int, floor: int = SUBLANE) -> int:
+    """Round a batch/row count up to the next power of two (>= ``floor``).
+
+    The fused engine pads every per-chunk operand to a bucketed shape so a
+    steady stream of slightly-varying chunk sizes hits a handful of jit-cache
+    entries instead of retracing per chunk.
+    """
+    if n <= floor:
+        return floor
+    return 1 << (n - 1).bit_length()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,3 +220,98 @@ def compile_dpm(dpm: DPM, registry: Registry, lane: int = LANE) -> CompiledDMM:
             compile_block(key, elements, registry, lane)
         )
     return CompiledDMM(state=registry.state, by_column=by_column)
+
+
+# ---------------------------------------------------------------------------
+# The fused engine: one device dispatch per event chunk, across all blocks
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedColumn:
+    """Host-side routing for one incoming (schema o, version v) column.
+
+    ``uid_pos`` is the precomputed attribute-uid -> payload-slot lookup that
+    densification resolves payload items against before its numpy scatter;
+    ``block_ids`` are the global block-table rows of the column super-set
+    iDCPM_v^o, in compile (column) order.
+    """
+
+    o: int
+    v: int
+    n_in: int
+    uid_pos: Dict[int, int]
+    block_ids: np.ndarray  # int32 (k,): rows of FusedDMM.src2d
+
+
+@dataclasses.dataclass
+class FusedDMM:
+    """Every compacted block of a state-``i`` DPM, flattened for one-launch
+    execution (see module docstring for the table layout)."""
+
+    state: int
+    n_in_pad: int  # uniform dense-payload width (lane multiple)
+    width: int  # W: uniform output width = max n_out_pad (lane multiple)
+    n_blocks: int  # true block count (src2d rows beyond this are -1 pad)
+    src2d: jax.Array  # int32 (n_blocks_pad, W), device-resident
+    routes: List[Tuple[int, int]]  # block t -> business entity (r, w)
+    n_out: np.ndarray  # int32 (n_blocks,): true output width per block
+    columns: Dict[Tuple[int, int], FusedColumn]
+
+    def column(self, o: int, v: int) -> Optional[FusedColumn]:
+        return self.columns.get((o, v))
+
+
+def compile_fused(
+    compiled: CompiledDMM, registry: Registry, lane: int = LANE
+) -> FusedDMM:
+    """Flatten a :class:`CompiledDMM` into the fused block table.
+
+    Compiled once per state (alongside the per-block form) and cached until
+    the next state bump evicts it -- the fused analogue of the paper's
+    Caffeine-cached hashmap of column super-sets.
+    """
+    routes: List[Tuple[int, int]] = []
+    n_out: List[int] = []
+    src_rows: List[np.ndarray] = []
+    columns: Dict[Tuple[int, int], FusedColumn] = {}
+    width = lane
+    n_in_max = 1
+    for (o, v), blocks in compiled.by_column.items():
+        for blk in blocks:
+            width = max(width, blk.n_out_pad)
+    for (o, v), blocks in compiled.by_column.items():
+        sv = registry.domain.get(o, v)
+        uid_pos = {u: k for k, u in enumerate(sv.uids)}
+        n_in_max = max(n_in_max, len(sv.uids))
+        ids = []
+        for blk in blocks:
+            t = len(routes)
+            ids.append(t)
+            routes.append((blk.key[2], blk.key[3]))
+            n_out.append(blk.n_out)
+            row = np.full((width,), -1, dtype=np.int32)
+            row[: blk.n_out_pad] = np.asarray(blk.src)
+            src_rows.append(row)
+        columns[(o, v)] = FusedColumn(
+            o=o,
+            v=v,
+            n_in=len(sv.uids),
+            uid_pos=uid_pos,
+            block_ids=np.asarray(ids, dtype=np.int32),
+        )
+    n_blocks = len(routes)
+    n_blocks_pad = max(SUBLANE, -(-max(n_blocks, 1) // SUBLANE) * SUBLANE)
+    table = np.full((n_blocks_pad, width), -1, dtype=np.int32)
+    if src_rows:
+        table[:n_blocks] = np.stack(src_rows)
+    return FusedDMM(
+        state=compiled.state,
+        n_in_pad=pad_to_lane(n_in_max, lane),
+        width=width,
+        n_blocks=n_blocks,
+        src2d=jnp.asarray(table),
+        routes=routes,
+        n_out=np.asarray(n_out, dtype=np.int32),
+        columns=columns,
+    )

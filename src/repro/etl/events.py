@@ -39,14 +39,16 @@ class CDCEvent:
     after: Optional[Dict[int, Optional[float]]]
     ts: int
 
-    def message(self) -> Message:
+    def payload(self) -> Dict[int, Optional[float]]:
         """The mappable payload (the 'after' image; deletes map 'before')."""
-        payload = self.after if self.after is not None else (self.before or {})
+        return self.after if self.after is not None else (self.before or {})
+
+    def message(self) -> Message:
         return Message(
             state=self.state,
             schema_id=self.schema_id,
             version=self.version,
-            payload=dict(payload),
+            payload=dict(self.payload()),
         )
 
 

@@ -8,11 +8,30 @@ training framework.  Responsibilities (paper SS3.4, SS5.5, SS6):
     the coordinator (the semi-automated error/update path);
   * at-least-once tolerance: duplicate payload keys within a sliding window
     are dropped before mapping;
-  * the mapping itself: batched by (schema, version) into fixed-width payload
-    tensors, then one masked gather per compacted block (Algorithm 6 on
-    device) or the pure-Python Algorithm 6 for scalar use;
-  * cache eviction: a state bump rebuilds the CompiledDMM (Caffeine
-    analogue).
+  * the mapping itself, through one of two engines:
+
+      engine="fused" (default)  the whole chunk is densified into one payload
+          tensor (per-payload-item triple collection against the precomputed
+          uid -> slot lookup, then a single numpy scatter per (o, v) group)
+          and mapped across ALL its blocks in ONE device dispatch per chunk
+          (:func:`repro.kernels.ops.dmm_apply_fused` over the state's
+          :class:`repro.core.dmm_jax.FusedDMM` block table) -- the dispatch
+          count is constant per chunk, not O(#blocks);
+
+      engine="blocks"           the legacy per-block path: one masked gather
+          per compacted block per (schema, version) group.  Kept for A/B
+          benchmarking (benchmarks/bench_mapping.py) and as a fallback for
+          impl="onehot", which has no fused realisation;
+
+    or the pure-Python Algorithm 6 (:meth:`METLApp.consume_scalar`), the
+    bit-exactness oracle for both engines;
+  * cache eviction: a state bump rebuilds the CompiledDMM + FusedDMM
+    (Caffeine analogue).
+
+Per-chunk operands are bucketed to powers of two
+(:func:`repro.core.dmm_jax.bucket_rows`) before dispatch, so the jit cache is
+effectively keyed on (state, bucketed batch shape) and steady-state consume
+traffic never retraces.  ``stats["dispatches"]`` counts device dispatches.
 """
 
 from __future__ import annotations
@@ -24,9 +43,10 @@ import numpy as np
 import jax.numpy as jnp
 
 from ..core.dmm import Message, map_message_dense
-from ..core.dmm_jax import CompiledDMM, compile_dpm
+from ..core.dmm_jax import CompiledDMM, FusedDMM, bucket_rows, compile_dpm, compile_fused
 from ..core.registry import StaleStateError
 from ..core.state import StateCoordinator, SystemState
+from ..kernels.ops import dmm_apply, dmm_apply_fused
 from .events import CDCEvent
 
 __all__ = ["METLApp", "CanonicalRow"]
@@ -46,14 +66,19 @@ class METLApp:
         strict_state: bool = False,
         dedup_window: int = 4096,
         impl: str = "ref",
+        engine: str = "fused",
     ):
+        if engine not in ("fused", "blocks"):
+            raise ValueError(f"unknown engine {engine!r}")
         self.coordinator = coordinator
         self.strict_state = strict_state
         self.impl = impl
+        self.engine = engine
         self._seen: collections.OrderedDict = collections.OrderedDict()
         self._dedup_window = dedup_window
         self._snapshot: Optional[SystemState] = None
         self._compiled: Optional[CompiledDMM] = None
+        self._fused: Optional[FusedDMM] = None
         # error management (paper §3.4): events from the future (app behind)
         # are parked and replayed after a refresh; events from the past are
         # dead-lettered with enough info to reset the Kafka offset
@@ -71,6 +96,7 @@ class METLApp:
         was parked)."""
         self._snapshot = self.coordinator.snapshot()
         self._compiled = compile_dpm(self._snapshot.dpm, self.coordinator.registry)
+        self._fused = compile_fused(self._compiled, self.coordinator.registry)
         self.stats["refreshes"] += 1
         rows: List[CanonicalRow] = []
         if self._parked:
@@ -97,6 +123,7 @@ class METLApp:
     def evict(self) -> None:
         """Cache eviction on state change (the Caffeine analogue)."""
         self._compiled = None
+        self._fused = None
         self._snapshot = None
         self.stats["evictions"] += 1
 
@@ -118,7 +145,14 @@ class METLApp:
 
     # -- the mapping ------------------------------------------------------------
     def consume(self, events: Iterable[CDCEvent]) -> List[CanonicalRow]:
-        """Map a chunk of events to canonical rows (batched per (o, v))."""
+        """Map a chunk of events to canonical rows.
+
+        Triage (dedup / state check / parking) is per event; the mapping
+        itself is chunk-batched through the configured engine.  The fused
+        engine issues a constant number of device dispatches per chunk (one,
+        when any mappable event is present); the legacy per-block engine
+        issues one per (column, block) pair.
+        """
         if self._compiled is None:
             self.refresh()
         groups: Dict[Tuple[int, int], List[CDCEvent]] = collections.defaultdict(list)
@@ -143,6 +177,97 @@ class METLApp:
                 continue
             groups[(ev.schema_id, ev.version)].append(ev)
 
+        # impl="onehot" only exists as a per-block kernel; route it to the
+        # legacy engine rather than silently changing the benchmarked path
+        if self.engine == "blocks" or self.impl == "onehot":
+            return self._consume_blocks(groups)
+        return self._consume_fused(groups)
+
+    def _consume_fused(
+        self, groups: Dict[Tuple[int, int], List[CDCEvent]]
+    ) -> List[CanonicalRow]:
+        """One fused dispatch for the whole chunk (all columns, all blocks).
+
+        Densification collects (row, slot, value) triples with one Python
+        pass over the *present* payload items (the legacy path walked every
+        schema attribute per event and wrote array elements one at a time),
+        then lands them in one numpy scatter per (o, v) group.  Row emission
+        is a single ``any``/``nonzero`` over the output mask.
+        """
+        fused = self._fused
+        rows: List[CanonicalRow] = []
+        # columns with no mapping paths contribute no output rows (exactly
+        # the legacy behaviour: the per-block loop body never runs)
+        cols = [
+            (col, evs)
+            for (o, v), evs in groups.items()
+            if (col := fused.column(o, v)) is not None and col.block_ids.size
+        ]
+        if not cols:
+            return rows  # zero device dispatches for an unmappable chunk
+
+        n_events = sum(len(evs) for _, evs in cols)
+        vals = np.zeros((bucket_rows(n_events), fused.n_in_pad), np.float32)
+        mask = np.zeros_like(vals, dtype=np.int8)
+        row_parts: List[np.ndarray] = []
+        blk_parts: List[np.ndarray] = []
+        out_events: List[CDCEvent] = []
+        base = 0
+        for col, evs in cols:
+            lookup = col.uid_pos
+            r_idx: List[int] = []
+            c_idx: List[int] = []
+            v_buf: List[float] = []
+            for b, ev in enumerate(evs):
+                for uid, val in ev.payload().items():
+                    if val is None:
+                        continue
+                    pos = lookup.get(uid)
+                    if pos is not None:
+                        r_idx.append(base + b)
+                        c_idx.append(pos)
+                        v_buf.append(val)
+            if r_idx:
+                vals[r_idx, c_idx] = v_buf
+                mask[r_idx, c_idx] = 1
+            # output rows in legacy emission order: per block, then per event
+            ev_rows = np.arange(base, base + len(evs), dtype=np.int32)
+            for t in col.block_ids:
+                row_parts.append(ev_rows)
+                blk_parts.append(np.full(len(evs), t, np.int32))
+                out_events.extend(evs)
+            base += len(evs)
+
+        row_ids = np.concatenate(row_parts)
+        blk_ids = np.concatenate(blk_parts)
+        s = row_ids.size
+        s_pad = bucket_rows(s)
+        impl = {"gather": "fused"}.get(self.impl, self.impl)
+        ov, om = dmm_apply_fused(
+            jnp.asarray(vals),
+            jnp.asarray(mask),
+            jnp.asarray(np.pad(row_ids, (0, s_pad - s))),
+            jnp.asarray(np.pad(blk_ids, (0, s_pad - s))),
+            fused.src2d,
+            impl=impl,
+        )
+        self.stats["dispatches"] += 1
+        ov = np.asarray(ov)[:s]
+        om = np.asarray(om)[:s]
+        emit = np.nonzero(om.any(axis=1))[0]  # only non-empty outgoing messages
+        self.stats["mapped"] += int(emit.size)
+        self.stats["empty"] += int(s - emit.size)
+        routes, n_out = fused.routes, fused.n_out
+        for i in emit:
+            t = int(blk_ids[i])
+            no = int(n_out[t])
+            rows.append((routes[t], ov[i, :no], om[i, :no], out_events[i].key))
+        return rows
+
+    def _consume_blocks(
+        self, groups: Dict[Tuple[int, int], List[CDCEvent]]
+    ) -> List[CanonicalRow]:
+        """Legacy engine: one device dispatch per block per (o, v) group."""
         rows: List[CanonicalRow] = []
         reg = self.coordinator.registry
         for (o, v), evs in groups.items():
@@ -158,11 +283,10 @@ class METLApp:
                         vals[b, k] = val
                         mask[b, k] = 1
             for block in self._compiled.column(o, v):
-                from ..kernels.ops import dmm_apply
-
                 ov, om = dmm_apply(
                     jnp.asarray(vals), jnp.asarray(mask), block.src, impl=self.impl
                 )
+                self.stats["dispatches"] += 1
                 ov, om = np.asarray(ov), np.asarray(om)
                 r, w = block.key[2], block.key[3]
                 for b, ev in enumerate(evs):

@@ -15,11 +15,18 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .masked_gather import masked_gather as _masked_gather_kernel
+from .segmented_gather import segmented_gather as _segmented_gather_kernel
 from .onehot_map import onehot_map as _onehot_map_kernel
 from .moe_combine import moe_combine as _moe_combine_kernel
 from .flash_attention import flash_attention as _flash_attention_kernel
 
-__all__ = ["dmm_apply", "moe_combine", "attention", "on_tpu"]
+__all__ = ["dmm_apply", "dmm_apply_fused", "moe_combine", "attention", "on_tpu"]
+
+# Device-dispatch accounting: incremented once per dmm_apply / dmm_apply_fused
+# call.  The fused-engine contract (one dispatch per consume chunk, not
+# O(#blocks)) is asserted against this counter in tests and reported by
+# benchmarks/bench_mapping.py.
+dispatch_count = 0
 
 
 def on_tpu() -> bool:
@@ -42,9 +49,13 @@ def dmm_apply(
       "ref"           pure-jnp oracle (XLA gather)
       "auto"          Pallas kernel on TPU, oracle elsewhere
     """
+    global dispatch_count
+    dispatch_count += 1
     if impl == "auto":
         impl = "gather" if on_tpu() else "ref"
     if impl == "ref":
+        # eager on purpose: the legacy per-block engine does not bucket its
+        # batch shapes, so a jit here would retrace per (group, block) shape
         return _ref.masked_gather_ref(values, mask, src, fill=fill)
     if impl == "gather":
         return _masked_gather_kernel(
@@ -52,6 +63,52 @@ def dmm_apply(
         )
     if impl == "onehot":
         return _onehot_map_kernel(values, mask, src, fill=fill, interpret=not on_tpu())
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+# jit'd fused oracle: the fused engine buckets its batch shapes
+# (repro.core.dmm_jax.bucket_rows), so tracing happens once per shape bucket
+# and every steady-state consume chunk is a cache hit.
+_segmented_gather_ref_jit = jax.jit(
+    _ref.segmented_gather_ref, static_argnames=("fill",)
+)
+
+
+def dmm_apply_fused(
+    values: jax.Array,
+    mask: jax.Array,
+    rows: jax.Array,
+    blks: jax.Array,
+    src2d: jax.Array,
+    *,
+    impl: str = "auto",
+    fill: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Apply ALL compacted blocks touched by a chunk in one device dispatch.
+
+    ``src2d`` is the state's stacked block table (device-resident, built once
+    per state by :class:`repro.core.dmm_jax.FusedDMM`); ``rows``/``blks``
+    route output row ``s`` to (event row ``rows[s]``, block ``blks[s]``).
+
+    impl:
+      "fused"  Pallas segmented-gather kernel (scalar-prefetched routing)
+      "ref"    pure-jnp oracle (XLA gathers, single fused jit)
+      "auto"   Pallas kernel on TPU, oracle elsewhere
+
+    The jit cache is keyed by operand shapes: (bucketed S, bucketed B,
+    n_in_pad) per chunk plus the state's (n_blocks_pad, W) table shape, so
+    steady-state consume traffic never retraces.
+    """
+    global dispatch_count
+    dispatch_count += 1
+    if impl == "auto":
+        impl = "fused" if on_tpu() else "ref"
+    if impl == "ref":
+        return _segmented_gather_ref_jit(values, mask, rows, blks, src2d, fill=fill)
+    if impl == "fused":
+        return _segmented_gather_kernel(
+            values, mask, rows, blks, src2d, fill=fill, interpret=not on_tpu()
+        )
     raise ValueError(f"unknown impl {impl!r}")
 
 

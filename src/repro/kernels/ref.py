@@ -12,7 +12,12 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["masked_gather_ref", "onehot_map_ref", "moe_combine_ref"]
+__all__ = [
+    "masked_gather_ref",
+    "segmented_gather_ref",
+    "onehot_map_ref",
+    "moe_combine_ref",
+]
 
 
 def masked_gather_ref(
@@ -29,6 +34,34 @@ def masked_gather_ref(
     safe = jnp.where(valid, src, 0)
     out_v = jnp.take(values, safe, axis=1)
     out_m = jnp.take(mask, safe, axis=1) & valid[None, :]
+    out_v = jnp.where(out_m, out_v, jnp.asarray(fill, values.dtype))
+    return out_v, out_m.astype(jnp.int8)
+
+
+def segmented_gather_ref(
+    values: jax.Array,
+    mask: jax.Array,
+    rows: jax.Array,
+    blks: jax.Array,
+    src2d: jax.Array,
+    *,
+    fill: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused DMM mapping oracle (whole chunk, all blocks, one pass).
+
+    values: (B, N_in) payload, mask: (B, N_in) validity, rows/blks: (S,)
+    int32 routing tables (output row s = event rows[s] through block blks[s]),
+    src2d: (n_blocks_pad, W) int32 stacked block index vectors (-1 = null).
+    Returns (out_values (S, W), out_mask (S, W) int8).
+    """
+    mask = mask.astype(jnp.bool_)
+    src = jnp.take(src2d, blks, axis=0)  # (S, W)
+    valid = src >= 0
+    safe = jnp.where(valid, src, 0)
+    v_rows = jnp.take(values, rows, axis=0)  # (S, N_in)
+    m_rows = jnp.take(mask, rows, axis=0)
+    out_v = jnp.take_along_axis(v_rows, safe, axis=1)
+    out_m = jnp.take_along_axis(m_rows, safe, axis=1) & valid
     out_v = jnp.where(out_m, out_v, jnp.asarray(fill, values.dtype))
     return out_v, out_m.astype(jnp.int8)
 

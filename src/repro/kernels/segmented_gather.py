@@ -1,0 +1,156 @@
+"""Pallas TPU kernel for the *fused* DMM mapping: one launch per event chunk.
+
+:mod:`repro.kernels.masked_gather` applies ONE compacted block to a batch --
+so a heterogeneous CDC chunk costs one device dispatch per block per
+(schema, version) group.  This kernel generalises it to the whole chunk:
+every (event, block) mapping path of the chunk becomes one *output row* of a
+single gather, so the dispatch count per chunk is 1 regardless of how many
+blocks or columns the chunk touches (the fused-engine contract of
+``METLApp.consume``).
+
+Device layout (built once per state by :class:`repro.core.dmm_jax.FusedDMM`):
+
+    src2d   : (n_blocks_pad, W) int32 -- every compacted block's index vector,
+              one row per block, right-padded with -1 to the uniform output
+              width W = max(n_out_pad).  Device-resident across chunks.
+
+Per-chunk operands (host-built, bucketed so jit caches hit):
+
+    values  : (B_pad, n_in_pad)  dense payloads, one row per mappable event,
+              in the event's own (o, v) attribute order
+    mask    : (B_pad, n_in_pad)  int8 validity (the paper's nad_p)
+    rows    : (S_pad,) int32     output row s reads event row rows[s]
+    blks    : (S_pad,) int32     ... through block src2d[blks[s]]
+
+``rows``/``blks`` are *scalar-prefetch* operands: they land in SMEM before
+the grid body runs, so the per-tile routing is known ahead of the payload
+tiles streaming HBM->VMEM.  ``src2d`` stays in VMEM (it can be MBs for big
+states -- too large for SMEM) and only the lane tile ``j`` of all blocks is
+resident per grid cell.
+
+Grid: (S_pad / block_s, W / block_n).  Each cell gathers a (block_s, block_n)
+output tile: pick the block rows of ``src2d``, pick the event rows of
+``values``/``mask`` (both fit VMEM whole -- chunk batches are O(100s) rows of
+O(100s) lanes), then a lane-axis ``take_along_axis`` exactly like the
+single-block kernel.  Pad slots (src = -1, or padding rows) come out invalid.
+
+Roofline: same O(S * (N_in + W)) bytes and zero FLOPs as the per-block path,
+but amortised into one kernel -- the win is dispatch/launch overhead and the
+Python loop around it, which dominates at ETL chunk sizes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["segmented_gather"]
+
+LANE = 128
+SUBLANE = 8
+
+
+def _kernel(
+    rows_ref,
+    blks_ref,
+    src2d_ref,
+    vals_ref,
+    mask_ref,
+    out_v_ref,
+    out_m_ref,
+    *,
+    block_s: int,
+    fill: float,
+):
+    i = pl.program_id(0)
+    rows = rows_ref[pl.ds(i * block_s, block_s)]  # (block_s,) int32 from SMEM
+    blks = blks_ref[pl.ds(i * block_s, block_s)]  # (block_s,) int32 from SMEM
+    src_tile = src2d_ref[...]  # (n_blocks_pad, block_n) lane tile j of all blocks
+    vals = vals_ref[...]  # (B_pad, n_in_pad) whole chunk payload
+    mask = mask_ref[...]  # (B_pad, n_in_pad) int8
+    src = jnp.take(src_tile, blks, axis=0)  # (block_s, block_n)
+    valid = src >= 0
+    safe = jnp.where(valid, src, 0)
+    v_rows = jnp.take(vals, rows, axis=0)  # (block_s, n_in_pad)
+    m_rows = jnp.take(mask, rows, axis=0)
+    g_v = jnp.take_along_axis(v_rows, safe, axis=1)
+    g_m = jnp.take_along_axis(m_rows, safe, axis=1)
+    ok = (g_m != 0) & valid
+    out_v_ref[...] = jnp.where(ok, g_v, jnp.asarray(fill, g_v.dtype))
+    out_m_ref[...] = ok.astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_s", "block_n", "fill", "interpret")
+)
+def segmented_gather(
+    values: jax.Array,
+    mask: jax.Array,
+    rows: jax.Array,
+    blks: jax.Array,
+    src2d: jax.Array,
+    *,
+    block_s: int = 256,
+    block_n: int = LANE,
+    fill: float = 0.0,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Map every (event, block) pair of a chunk in one kernel launch.
+
+    values: (B, N_in), mask: (B, N_in), rows/blks: (S,) int32,
+    src2d: (n_blocks_pad, W) int32 with n_blocks_pad % 8 == 0 and
+    W % block_n == 0.  Returns ((S, W) values, (S, W) int8 mask); output row
+    ``s`` is event row ``rows[s]`` mapped through block ``blks[s]``.
+    """
+    b, n_in = values.shape
+    (s,) = rows.shape
+    n_blocks_pad, w = src2d.shape
+    if w % block_n:
+        raise ValueError(f"W={w} not a multiple of block_n={block_n}")
+    if n_blocks_pad % SUBLANE:
+        raise ValueError(f"n_blocks_pad={n_blocks_pad} not a multiple of {SUBLANE}")
+    mask = mask.astype(jnp.int8)
+
+    # pad the chunk to tile boundaries (callers bucket to powers of two, so
+    # these pads are usually no-ops and the jit cache keys recur)
+    s8 = -(-s // SUBLANE) * SUBLANE
+    bs = min(block_s, s8)
+    bs = -(-bs // SUBLANE) * SUBLANE
+    s_pad = -(-s // bs) * bs
+    b_pad = -(-b // SUBLANE) * SUBLANE
+    n_in_pad = -(-n_in // LANE) * LANE
+    if s_pad != s:
+        rows = jnp.pad(rows, (0, s_pad - s))
+        blks = jnp.pad(blks, (0, s_pad - s))
+    if b_pad != b or n_in_pad != n_in:
+        values = jnp.pad(values, ((0, b_pad - b), (0, n_in_pad - n_in)))
+        mask = jnp.pad(mask, ((0, b_pad - b), (0, n_in_pad - n_in)))
+
+    grid = (s_pad // bs, w // block_n)
+    out_v, out_m = pl.pallas_call(
+        functools.partial(_kernel, block_s=bs, fill=fill),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((n_blocks_pad, block_n), lambda i, j, rows, blks: (0, j)),
+                pl.BlockSpec((b_pad, n_in_pad), lambda i, j, rows, blks: (0, 0)),
+                pl.BlockSpec((b_pad, n_in_pad), lambda i, j, rows, blks: (0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((bs, block_n), lambda i, j, rows, blks: (i, j)),
+                pl.BlockSpec((bs, block_n), lambda i, j, rows, blks: (i, j)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((s_pad, w), values.dtype),
+            jax.ShapeDtypeStruct((s_pad, w), jnp.int8),
+        ],
+        interpret=interpret,
+    )(rows, blks, src2d, values, mask)
+    return out_v[:s], out_m[:s]

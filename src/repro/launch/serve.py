@@ -3,6 +3,14 @@ server.
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b --smoke \
         --requests 8 --max-new 16
+
+With ``--etl`` the prompts are not random: a CDC stream flows through the
+METL app's *fused* mapping engine (one device dispatch per event chunk, see
+:mod:`repro.etl.metl`) and the resulting canonical rows are tokenized into
+the request prompts -- the paper's pipeline (CDC -> DMM -> CDM) fronting the
+model server.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b --smoke --etl
 """
 
 from __future__ import annotations
@@ -10,10 +18,41 @@ from __future__ import annotations
 import argparse
 
 
+def _etl_prompts(n_requests: int, vocab: int, max_len: int = 16):
+    """Stream CDC events through the fused METL path into token prompts."""
+    from repro.core.state import StateCoordinator
+    from repro.core.synthetic import ScenarioConfig, build_scenario
+    from repro.etl import EventSource, METLApp
+    from repro.etl.batcher import tokenize_row
+
+    sc = build_scenario(ScenarioConfig(n_schemas=6, versions_per_schema=3, seed=7))
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    app = METLApp(coord, engine="fused")
+    source = EventSource(sc.registry, seed=7)
+    rows, pos = [], 0
+    while len(rows) < n_requests:
+        got = app.consume(source.slice(pos, 256))
+        pos += 256
+        rows.extend(got)
+        if not got and pos >= 16 * 256:
+            raise RuntimeError(
+                f"ETL stream produced no canonical rows after {pos} events"
+            )
+    prompts = [tokenize_row(row, vocab)[:max_len] for row in rows[:n_requests]]
+    print(
+        f"etl: {app.stats['events']} events -> {len(rows)} canonical rows "
+        f"in {app.stats['dispatches']} device dispatches "
+        f"({app.stats['events'] / max(1, app.stats['dispatches']):.0f} events/dispatch)"
+    )
+    return prompts
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo_1b")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--etl", action="store_true",
+                    help="feed prompts from the fused METL mapping path")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=256)
@@ -31,11 +70,15 @@ def main() -> None:
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     sc = ServeConfig(batch=args.batch, cache_len=args.cache_len, max_new=args.max_new)
     server = Server(params, cfg, sc)
-    rng = np.random.default_rng(0)
-    rids = [
-        server.submit(rng.integers(2, cfg.vocab, size=rng.integers(2, 8)).tolist())
-        for _ in range(args.requests)
-    ]
+    if args.etl:
+        prompts = _etl_prompts(args.requests, cfg.vocab)
+    else:
+        rng = np.random.default_rng(0)
+        prompts = [
+            rng.integers(2, cfg.vocab, size=rng.integers(2, 8)).tolist()
+            for _ in range(args.requests)
+        ]
+    rids = [server.submit(p) for p in prompts]
     server.run(n_steps=args.requests * (args.max_new + 8))
     for rid in rids:
         toks = server.done.get(rid)

@@ -10,6 +10,10 @@ Invariants from the paper:
 """
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
