@@ -7,7 +7,11 @@ DMM gather path and the baseline matrix (one-hot matmul) path -- the paper's
 Algorithm 6 vs Algorithm 1 story -- plus the Pallas kernel variants, and
 (c) the **fused-engine A/B**: `METLApp` consume through the legacy
 one-dispatch-per-block path vs the fused one-dispatch-per-chunk path
-(events/s and device-dispatch counts for each).
+(events/s and device-dispatch counts for each), and (d) the
+**replicated-vs-sharded A/B**: the fused engine against `engine="sharded"`
+(block table partitioned over the mesh ``data`` axis) per shard count, with
+per-shard table bytes ~ total/N.  The sharded rows run in a subprocess with
+a forced N-device CPU topology (jax pins the device count at first init).
 
 Standalone smoke entry point (used by scripts/ci.sh):
 
@@ -15,6 +19,10 @@ Standalone smoke entry point (used by scripts/ci.sh):
 """
 
 from __future__ import annotations
+
+import os
+import subprocess
+import sys
 
 import numpy as np
 import jax
@@ -45,16 +53,75 @@ def _consume_bench(app: METLApp, events, *, warmup: int = 1, iters: int = 5):
     return us, dispatches
 
 
-def run(smoke: bool = False) -> list:
-    rows = []
+def _bench_shapes(smoke: bool):
     if smoke:
         cfg = ScenarioConfig(n_schemas=4, versions_per_schema=2, attrs_per_version=6,
                              n_entities=2, cdm_attrs=8, seed=11)
-        B, n_events, iters = 64, 64, 2
-    else:
-        cfg = ScenarioConfig(n_schemas=40, versions_per_schema=10, attrs_per_version=10,
-                             n_entities=10, cdm_attrs=25, seed=11)
-        B, n_events, iters = 1024, 512, 5
+        return cfg, 64, 64, 2
+    cfg = ScenarioConfig(n_schemas=40, versions_per_schema=10, attrs_per_version=10,
+                         n_entities=10, cdm_attrs=25, seed=11)
+    return cfg, 1024, 512, 5
+
+
+def sharded_worker(shards: int, smoke: bool) -> list:
+    """Replicated-vs-sharded consume A/B; runs in the forced N-device
+    subprocess so both sides see the same topology/process."""
+    from repro.launch.mesh import make_etl_mesh
+
+    cfg, _, n_events, iters = _bench_shapes(smoke)
+    sc = build_scenario(cfg)
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    events = EventSource(sc.registry, seed=1).slice(0, n_events)
+    rows = []
+
+    app_rep = METLApp(coord, engine="fused")
+    us_rep, _ = _consume_bench(app_rep, events, iters=iters)
+    total_bytes = int(np.asarray(app_rep._fused.src2d).nbytes)
+
+    mesh = make_etl_mesh(shards)
+    app_sh = METLApp(coord, engine="sharded", mesh=mesh)
+    us_sh, disp = _consume_bench(app_sh, events, iters=iters)
+    t = app_sh._sharded
+    rows.append((
+        f"mapping/metl_consume_sharded_{shards}sh_{n_events}ev",
+        us_sh,
+        f"{n_events / (us_sh / 1e6):.0f} events/s, {disp} dispatch/chunk "
+        f"(x{shards} shards), {us_rep / us_sh:.2f}x vs replicated-in-proc "
+        f"({us_rep:.0f} us)",
+    ))
+    rows.append((
+        f"mapping/sharded_table_bytes_{shards}sh",
+        float(t.table_bytes_per_shard),
+        f"{t.table_bytes_per_shard} B/shard vs {total_bytes} B replicated "
+        f"(total/{shards} = {total_bytes / shards:.0f}; "
+        f"{t.blocks_per_shard}/{t.n_blocks} blocks per shard)",
+    ))
+    return rows
+
+
+def _sharded_ab(shards: int, smoke: bool) -> list:
+    """Spawn the sharded worker under a forced {shards}-device topology and
+    re-parse its CSV rows."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={shards}"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    args = [sys.executable, os.path.abspath(__file__), "--sharded-worker", str(shards)]
+    if smoke:
+        args.append("--smoke")
+    r = subprocess.run(args, capture_output=True, text=True, timeout=560, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"sharded worker failed:\n{r.stdout}\n{r.stderr[-2000:]}")
+    rows = []
+    for line in r.stdout.strip().splitlines():
+        name, us, derived = line.split(",", 2)
+        rows.append((name, float(us), derived))
+    return rows
+
+
+def run(smoke: bool = False) -> list:
+    rows = []
+    cfg, B, n_events, iters = _bench_shapes(smoke)
     sc = build_scenario(cfg)
     reg = sc.registry
     compiled = compile_dpm(sc.dpm, reg)
@@ -103,6 +170,10 @@ def run(smoke: bool = False) -> list:
         f"{n_events / (us_fused / 1e6):.0f} events/s, {disp_fused} dispatch/chunk, "
         f"{us_blocks / us_fused:.1f}x vs per-block",
     ))
+
+    # -- replicated vs sharded A/B (subprocess per shard count) ---------------
+    for shards in ((2,) if smoke else (2, 4, 8)):
+        rows.extend(_sharded_ab(shards, smoke))
     return rows
 
 
@@ -111,7 +182,14 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="tiny shapes, CI-sized")
+    ap.add_argument("--sharded-worker", type=int, default=0,
+                    help="internal: emit sharded A/B rows on a forced "
+                         "N-device topology (set via XLA_FLAGS by the parent)")
     args = ap.parse_args()
+    if args.sharded_worker:
+        for name, us, derived in sharded_worker(args.sharded_worker, args.smoke):
+            print(f"{name},{us:.1f},{derived}", flush=True)
+        sys.exit(0)
     print("name,us_per_call,derived")
     for name, us, derived in run(smoke=args.smoke):
         print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,19 +1,23 @@
 #!/usr/bin/env bash
-# Tier-1 gate + perf smoke.  Run from anywhere:
+# Full-suite gate + perf smoke.  Run from anywhere:
 #
 #     bash scripts/ci.sh
 #
-# 1. the repo's tier-1 test suite (ROADMAP.md);
-# 2. a tiny-shape run of the mapping benchmark so the fused-engine perf
-#    path (kernel, dispatcher, consume) can't rot silently even when no
-#    test exercises the timing harness.
+# 1. the FULL test suite with zero tolerated failures -- the 16 historical
+#    reds (optimization_barrier grad rule, jax.sharding.AxisType) are fixed,
+#    so there is no known-failure allowance any more; this includes the
+#    tier-1 set (ROADMAP.md), the multi-device subprocess tests, and the
+#    sharded-vs-replicated fused-consume parity tests;
+# 2. a tiny-shape run of the mapping benchmark so the fused- and
+#    sharded-engine perf paths (kernel, shard_map dispatcher, consume)
+#    can't rot silently even when no test exercises the timing harness.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
+echo "== full suite (tier-1 + distributed + sharded parity; 0 failures) =="
+python -m pytest -q
 
-echo "== benchmark smoke (fused mapping engine) =="
+echo "== benchmark smoke (fused + sharded mapping engine) =="
 python benchmarks/bench_mapping.py --smoke

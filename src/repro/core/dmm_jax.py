@@ -45,6 +45,21 @@ over :mod:`repro.kernels.segmented_gather`):
 Batch-shape bucketing (:func:`bucket_rows`, powers of two) keeps the set of
 operand shapes small so the jit cache is effectively keyed on (state,
 bucketed batch shape) and steady-state consume chunks never retrace.
+
+For CDMs too wide for one device, :class:`ShardedFusedDMM` (built by
+:func:`compile_fused_sharded`) partitions the flattened block table over the
+entity/output axis: global block ``t`` lives on shard ``t //
+blocks_per_shard``, and the stacked per-shard tables form
+
+    src3d      (n_shards, n_blocks_pad_loc, W) int32, leading axis placed
+               over the mesh ``data`` axis (NamedSharding), so each device
+               holds only its (1, n_blocks_pad_loc, W) slice
+
+executed per shard under ``shard_map``
+(:func:`repro.kernels.ops.dmm_apply_sharded`) -- still one dispatch per
+chunk per shard.  The contiguous-by-block partition preserves the
+replicated engine's emission order, so sharded consume is bit-exact with
+the fused path.
 """
 
 from __future__ import annotations
@@ -73,6 +88,8 @@ __all__ = [
     "CompiledDMM",
     "FusedColumn",
     "FusedDMM",
+    "ShardedFusedDMM",
+    "compile_fused_sharded",
 ]
 
 LANE = 128  # TPU vector lane width; last-dim tiles must be multiples of this
@@ -262,14 +279,12 @@ class FusedDMM:
         return self.columns.get((o, v))
 
 
-def compile_fused(
-    compiled: CompiledDMM, registry: Registry, lane: int = LANE
-) -> FusedDMM:
-    """Flatten a :class:`CompiledDMM` into the fused block table.
+def _fused_tables(compiled: CompiledDMM, registry: Registry, lane: int = LANE):
+    """Host-side flattening shared by the replicated and sharded compiles.
 
-    Compiled once per state (alongside the per-block form) and cached until
-    the next state bump evicts it -- the fused analogue of the paper's
-    Caffeine-cached hashmap of column super-sets.
+    Returns ``(table, routes, n_out, columns, n_in_pad, width, n_blocks)``
+    where ``table`` is the full numpy (n_blocks_pad, W) block table; the
+    callers decide device placement (replicated vs sharded over a mesh).
     """
     routes: List[Tuple[int, int]] = []
     n_out: List[int] = []
@@ -305,13 +320,136 @@ def compile_fused(
     table = np.full((n_blocks_pad, width), -1, dtype=np.int32)
     if src_rows:
         table[:n_blocks] = np.stack(src_rows)
+    n_out_arr = np.asarray(n_out, dtype=np.int32)
+    return table, routes, n_out_arr, columns, pad_to_lane(n_in_max, lane), width, n_blocks
+
+
+def compile_fused(
+    compiled: CompiledDMM, registry: Registry, lane: int = LANE
+) -> FusedDMM:
+    """Flatten a :class:`CompiledDMM` into the fused block table.
+
+    Compiled once per state (alongside the per-block form) and cached until
+    the next state bump evicts it -- the fused analogue of the paper's
+    Caffeine-cached hashmap of column super-sets.
+    """
+    table, routes, n_out, columns, n_in_pad, width, n_blocks = _fused_tables(
+        compiled, registry, lane
+    )
     return FusedDMM(
         state=compiled.state,
-        n_in_pad=pad_to_lane(n_in_max, lane),
+        n_in_pad=n_in_pad,
         width=width,
         n_blocks=n_blocks,
         src2d=jnp.asarray(table),
         routes=routes,
-        n_out=np.asarray(n_out, dtype=np.int32),
+        n_out=n_out,
+        columns=columns,
+    )
+
+
+@dataclasses.dataclass
+class ShardedFusedDMM:
+    """The fused block table partitioned over the entity/output axis.
+
+    Global block ``t`` (the replicated table's row ``t``, in compile/column
+    order) lives on shard ``t // blocks_per_shard`` at local row ``t %
+    blocks_per_shard``; the contiguous partition keeps emission order
+    identical to the replicated engine.  ``src3d`` stacks the per-shard
+    tables with a leading shard axis that is placed over the mesh ``data``
+    axis when a mesh is given -- each device then holds only its own
+    (1, n_blocks_pad_loc, W) slice, so per-shard table bytes are ~ total /
+    n_shards.  ``routes`` / ``n_out`` / ``columns`` are host-side emission
+    and densification metadata (global order; the per-shard views are
+    :meth:`shard_routes` / :meth:`shard_n_out`).
+    """
+
+    state: int
+    n_shards: int
+    blocks_per_shard: int
+    n_in_pad: int
+    width: int
+    n_blocks: int  # true global block count
+    src3d: jax.Array  # int32 (n_shards, n_blocks_pad_loc, W)
+    mesh: Optional[object]  # jax Mesh the table is placed on (None = host)
+    routes: List[Tuple[int, int]]  # global block t -> business entity (r, w)
+    n_out: np.ndarray  # int32 (n_blocks,) true output width per block
+    columns: Dict[Tuple[int, int], FusedColumn]
+
+    def column(self, o: int, v: int) -> Optional[FusedColumn]:
+        return self.columns.get((o, v))
+
+    @property
+    def n_blocks_pad_loc(self) -> int:
+        return int(self.src3d.shape[1])
+
+    @property
+    def table_bytes_per_shard(self) -> int:
+        """Device-resident block-table bytes held by ONE shard."""
+        return self.n_blocks_pad_loc * self.width * 4
+
+    def shard_slice(self, s: int) -> Tuple[int, int]:
+        """Global block id range [lo, hi) owned by shard ``s``."""
+        lo = s * self.blocks_per_shard
+        return lo, min(lo + self.blocks_per_shard, self.n_blocks)
+
+    def shard_routes(self, s: int) -> List[Tuple[int, int]]:
+        lo, hi = self.shard_slice(s)
+        return self.routes[lo:hi]
+
+    def shard_n_out(self, s: int) -> np.ndarray:
+        lo, hi = self.shard_slice(s)
+        return self.n_out[lo:hi]
+
+
+def compile_fused_sharded(
+    compiled: CompiledDMM,
+    registry: Registry,
+    *,
+    mesh=None,
+    n_shards: Optional[int] = None,
+    axis: str = "data",
+    lane: int = LANE,
+) -> ShardedFusedDMM:
+    """Partition the fused block table over ``n_shards`` (the mesh ``data``
+    axis size when a mesh is given) and place each shard's slice on its own
+    device.
+
+    With ``mesh=None`` the stacked table stays on the default device
+    (host-only partitioning -- used by unit tests and the 1-shard fallback
+    path); with a mesh it is ``device_put`` under
+    :func:`repro.sharding.specs.dmm_table_sharding`.
+    """
+    if n_shards is None:
+        if mesh is None:
+            raise ValueError("need a mesh or an explicit n_shards")
+        n_shards = mesh.shape[axis]
+    table, routes, n_out, columns, n_in_pad, width, n_blocks = _fused_tables(
+        compiled, registry, lane
+    )
+    per = -(-max(n_blocks, 1) // n_shards)
+    per_pad = max(SUBLANE, -(-per // SUBLANE) * SUBLANE)
+    src3d_np = np.full((n_shards, per_pad, width), -1, dtype=np.int32)
+    for s in range(n_shards):
+        lo, hi = s * per, min((s + 1) * per, n_blocks)
+        if hi > lo:
+            src3d_np[s, : hi - lo] = table[lo:hi]
+    if mesh is not None:
+        from ..sharding.specs import dmm_table_sharding
+
+        src3d = jax.device_put(src3d_np, dmm_table_sharding(mesh, axis))
+    else:
+        src3d = jnp.asarray(src3d_np)
+    return ShardedFusedDMM(
+        state=compiled.state,
+        n_shards=n_shards,
+        blocks_per_shard=per,
+        n_in_pad=n_in_pad,
+        width=width,
+        n_blocks=n_blocks,
+        src3d=src3d,
+        mesh=mesh,
+        routes=routes,
+        n_out=n_out,
         columns=columns,
     )

@@ -23,6 +23,17 @@ training framework.  Responsibilities (paper SS3.4, SS5.5, SS6):
           benchmarking (benchmarks/bench_mapping.py) and as a fallback for
           impl="onehot", which has no fused realisation;
 
+      engine="sharded"          the fused path with the block table
+          partitioned over the mesh ``data`` axis
+          (:class:`repro.core.dmm_jax.ShardedFusedDMM`): each shard holds
+          only its slice of the table and runs the segmented gather under
+          shard_map (:func:`repro.kernels.ops.dmm_apply_sharded`), still one
+          dispatch per chunk per shard; the emitted dense rows are
+          all-gathered back to the host before row emission, bit-exact with
+          engine="fused".  Pass ``mesh=`` (e.g.
+          :func:`repro.launch.mesh.make_etl_mesh`); on a 1-device mesh the
+          app transparently falls back to the replicated fused path;
+
     or the pure-Python Algorithm 6 (:meth:`METLApp.consume_scalar`), the
     bit-exactness oracle for both engines;
   * cache eviction: a state bump rebuilds the CompiledDMM + FusedDMM
@@ -43,10 +54,18 @@ import numpy as np
 import jax.numpy as jnp
 
 from ..core.dmm import Message, map_message_dense
-from ..core.dmm_jax import CompiledDMM, FusedDMM, bucket_rows, compile_dpm, compile_fused
+from ..core.dmm_jax import (
+    CompiledDMM,
+    FusedDMM,
+    ShardedFusedDMM,
+    bucket_rows,
+    compile_dpm,
+    compile_fused,
+    compile_fused_sharded,
+)
 from ..core.registry import StaleStateError
 from ..core.state import StateCoordinator, SystemState
-from ..kernels.ops import dmm_apply, dmm_apply_fused
+from ..kernels.ops import dmm_apply, dmm_apply_fused, dmm_apply_sharded
 from .events import CDCEvent
 
 __all__ = ["METLApp", "CanonicalRow"]
@@ -67,18 +86,27 @@ class METLApp:
         dedup_window: int = 4096,
         impl: str = "ref",
         engine: str = "fused",
+        mesh=None,
     ):
-        if engine not in ("fused", "blocks"):
+        if engine not in ("fused", "blocks", "sharded"):
             raise ValueError(f"unknown engine {engine!r}")
         self.coordinator = coordinator
         self.strict_state = strict_state
         self.impl = impl
         self.engine = engine
+        # engine="sharded": the fused block table partitions over the mesh
+        # ``data`` axis.  A 1-shard mesh (or no mesh) degenerates to the
+        # replicated fused path -- same table, no shard_map wrapper.
+        self.mesh = mesh
+        self._n_shards = 1
+        if engine == "sharded" and mesh is not None:
+            self._n_shards = int(mesh.shape["data"])
         self._seen: collections.OrderedDict = collections.OrderedDict()
         self._dedup_window = dedup_window
         self._snapshot: Optional[SystemState] = None
         self._compiled: Optional[CompiledDMM] = None
         self._fused: Optional[FusedDMM] = None
+        self._sharded: Optional[ShardedFusedDMM] = None
         # error management (paper §3.4): events from the future (app behind)
         # are parked and replayed after a refresh; events from the past are
         # dead-lettered with enough info to reset the Kafka offset
@@ -96,7 +124,16 @@ class METLApp:
         was parked)."""
         self._snapshot = self.coordinator.snapshot()
         self._compiled = compile_dpm(self._snapshot.dpm, self.coordinator.registry)
-        self._fused = compile_fused(self._compiled, self.coordinator.registry)
+        if self.engine == "sharded" and self._n_shards > 1:
+            # each device gets only its slice of the block table; the
+            # replicated FusedDMM is never materialised on this path
+            self._fused = None
+            self._sharded = compile_fused_sharded(
+                self._compiled, self.coordinator.registry, mesh=self.mesh
+            )
+        else:
+            self._fused = compile_fused(self._compiled, self.coordinator.registry)
+            self._sharded = None
         self.stats["refreshes"] += 1
         rows: List[CanonicalRow] = []
         if self._parked:
@@ -124,6 +161,7 @@ class METLApp:
         """Cache eviction on state change (the Caffeine analogue)."""
         self._compiled = None
         self._fused = None
+        self._sharded = None
         self._snapshot = None
         self.stats["evictions"] += 1
 
@@ -181,21 +219,20 @@ class METLApp:
         # legacy engine rather than silently changing the benchmarked path
         if self.engine == "blocks" or self.impl == "onehot":
             return self._consume_blocks(groups)
+        if self.engine == "sharded" and self._n_shards > 1:
+            return self._consume_sharded(groups)
         return self._consume_fused(groups)
 
-    def _consume_fused(
-        self, groups: Dict[Tuple[int, int], List[CDCEvent]]
-    ) -> List[CanonicalRow]:
-        """One fused dispatch for the whole chunk (all columns, all blocks).
+    def _densify_chunk(self, fused, groups):
+        """Chunk densification shared by the fused and sharded engines.
 
-        Densification collects (row, slot, value) triples with one Python
-        pass over the *present* payload items (the legacy path walked every
-        schema attribute per event and wrote array elements one at a time),
-        then lands them in one numpy scatter per (o, v) group.  Row emission
-        is a single ``any``/``nonzero`` over the output mask.
+        Collects (row, slot, value) triples with one Python pass over the
+        *present* payload items against the engine table's uid -> slot
+        lookup, lands them in one numpy scatter per (o, v) group, and builds
+        the (row, block) routing in legacy emission order (per column, per
+        block, per event).  Returns ``(vals, mask, row_ids, blk_ids,
+        out_events)`` or None for an unmappable chunk.
         """
-        fused = self._fused
-        rows: List[CanonicalRow] = []
         # columns with no mapping paths contribute no output rows (exactly
         # the legacy behaviour: the per-block loop body never runs)
         cols = [
@@ -204,7 +241,7 @@ class METLApp:
             if (col := fused.column(o, v)) is not None and col.block_ids.size
         ]
         if not cols:
-            return rows  # zero device dispatches for an unmappable chunk
+            return None  # zero device dispatches for an unmappable chunk
 
         n_events = sum(len(evs) for _, evs in cols)
         vals = np.zeros((bucket_rows(n_events), fused.n_in_pad), np.float32)
@@ -238,8 +275,32 @@ class METLApp:
                 out_events.extend(evs)
             base += len(evs)
 
-        row_ids = np.concatenate(row_parts)
-        blk_ids = np.concatenate(blk_parts)
+        return vals, mask, np.concatenate(row_parts), np.concatenate(blk_parts), out_events
+
+    def _emit_rows(self, fused, ov, om, blk_ids, out_events) -> List[CanonicalRow]:
+        """Row emission shared by the fused and sharded engines: one
+        ``any``/``nonzero`` over the gathered output mask, then slice each
+        surviving row to its block's true width."""
+        rows: List[CanonicalRow] = []
+        emit = np.nonzero(om.any(axis=1))[0]  # only non-empty outgoing messages
+        self.stats["mapped"] += int(emit.size)
+        self.stats["empty"] += int(blk_ids.size - emit.size)
+        routes, n_out = fused.routes, fused.n_out
+        for i in emit:
+            t = int(blk_ids[i])
+            no = int(n_out[t])
+            rows.append((routes[t], ov[i, :no], om[i, :no], out_events[i].key))
+        return rows
+
+    def _consume_fused(
+        self, groups: Dict[Tuple[int, int], List[CDCEvent]]
+    ) -> List[CanonicalRow]:
+        """One fused dispatch for the whole chunk (all columns, all blocks)."""
+        fused = self._fused
+        dense = self._densify_chunk(fused, groups)
+        if dense is None:
+            return []
+        vals, mask, row_ids, blk_ids, out_events = dense
         s = row_ids.size
         s_pad = bucket_rows(s)
         impl = {"gather": "fused"}.get(self.impl, self.impl)
@@ -254,15 +315,55 @@ class METLApp:
         self.stats["dispatches"] += 1
         ov = np.asarray(ov)[:s]
         om = np.asarray(om)[:s]
-        emit = np.nonzero(om.any(axis=1))[0]  # only non-empty outgoing messages
-        self.stats["mapped"] += int(emit.size)
-        self.stats["empty"] += int(s - emit.size)
-        routes, n_out = fused.routes, fused.n_out
-        for i in emit:
-            t = int(blk_ids[i])
-            no = int(n_out[t])
-            rows.append((routes[t], ov[i, :no], om[i, :no], out_events[i].key))
-        return rows
+        return self._emit_rows(fused, ov, om, blk_ids, out_events)
+
+    def _consume_sharded(
+        self, groups: Dict[Tuple[int, int], List[CDCEvent]]
+    ) -> List[CanonicalRow]:
+        """The fused path with the block table sharded over the mesh
+        ``data`` axis: per-shard routing, one shard_map launch per chunk
+        (one segmented-gather dispatch per shard), then an all-gather of the
+        emitted dense rows back to the host and the shared emission pass in
+        global (replicated-engine) order -- bit-exact with engine="fused".
+        """
+        sh = self._sharded
+        dense = self._densify_chunk(sh, groups)
+        if dense is None:
+            return []
+        vals, mask, row_ids, blk_ids, out_events = dense
+        # split the global (row, block) routing by owning shard; the
+        # contiguous block partition makes ownership a divide, and each
+        # shard's selection preserves global order for the scatter-back
+        per = sh.blocks_per_shard
+        owner = blk_ids // per
+        sel = [np.nonzero(owner == s)[0] for s in range(sh.n_shards)]
+        s_pad = bucket_rows(max(len(idx) for idx in sel))
+        rows_sh = np.zeros((sh.n_shards, s_pad), np.int32)
+        blks_sh = np.zeros((sh.n_shards, s_pad), np.int32)
+        for s, idx in enumerate(sel):
+            rows_sh[s, : len(idx)] = row_ids[idx]
+            blks_sh[s, : len(idx)] = blk_ids[idx] - s * per
+        impl = {"gather": "fused"}.get(self.impl, self.impl)
+        ov, om = dmm_apply_sharded(
+            jnp.asarray(vals),
+            jnp.asarray(mask),
+            jnp.asarray(rows_sh),
+            jnp.asarray(blks_sh),
+            sh.src3d,
+            mesh=sh.mesh,
+            impl=impl,
+        )
+        self.stats["dispatches"] += 1
+        # all-gather: pull every shard's emitted dense rows to the host and
+        # scatter them back to the global output order
+        ov = np.asarray(ov)
+        om = np.asarray(om)
+        gv = np.zeros((row_ids.size, sh.width), ov.dtype)
+        gm = np.zeros((row_ids.size, sh.width), om.dtype)
+        for s, idx in enumerate(sel):
+            gv[idx] = ov[s, : len(idx)]
+            gm[idx] = om[s, : len(idx)]
+        return self._emit_rows(sh, gv, gm, blk_ids, out_events)
 
     def _consume_blocks(
         self, groups: Dict[Tuple[int, int], List[CDCEvent]]

@@ -8,6 +8,7 @@ oracle for speed.  ``impl`` lets benchmarks force a path.
 
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -15,12 +16,22 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .masked_gather import masked_gather as _masked_gather_kernel
-from .segmented_gather import segmented_gather as _segmented_gather_kernel
+from .segmented_gather import (
+    segmented_gather as _segmented_gather_kernel,
+    segmented_gather_shard as _segmented_gather_shard,
+)
 from .onehot_map import onehot_map as _onehot_map_kernel
 from .moe_combine import moe_combine as _moe_combine_kernel
 from .flash_attention import flash_attention as _flash_attention_kernel
 
-__all__ = ["dmm_apply", "dmm_apply_fused", "moe_combine", "attention", "on_tpu"]
+__all__ = [
+    "dmm_apply",
+    "dmm_apply_fused",
+    "dmm_apply_sharded",
+    "moe_combine",
+    "attention",
+    "on_tpu",
+]
 
 # Device-dispatch accounting: incremented once per dmm_apply / dmm_apply_fused
 # call.  The fused-engine contract (one dispatch per consume chunk, not
@@ -110,6 +121,78 @@ def dmm_apply_fused(
             values, mask, rows, blks, src2d, fill=fill, interpret=not on_tpu()
         )
     raise ValueError(f"unknown impl {impl!r}")
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_program(mesh, axis: str, impl: str, fill: float):
+    """One jitted shard_map program per (mesh, axis, impl, fill).
+
+    The cache keeps the shard_map closure identity stable so the jit cache
+    underneath is keyed only on operand shapes -- same retrace discipline as
+    the replicated fused path (bucketed shapes -> a handful of entries).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if impl == "ref":
+
+        def local(v, m, r, b, t):
+            ov, om = _ref.segmented_gather_ref(v, m, r[0], b[0], t[0], fill=fill)
+            return ov[None], om[None]
+
+    else:
+        local = functools.partial(
+            _segmented_gather_shard, fill=fill, interpret=not on_tpu()
+        )
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P(), P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P(axis)),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def dmm_apply_sharded(
+    values: jax.Array,
+    mask: jax.Array,
+    rows: jax.Array,
+    blks: jax.Array,
+    src3d: jax.Array,
+    *,
+    mesh,
+    axis: str = "data",
+    impl: str = "auto",
+    fill: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sharded fused mapping: each mesh-``axis`` shard applies its own slice
+    of the block table to the (replicated) chunk payload in ONE launch.
+
+    ``src3d`` is the state's stacked per-shard table
+    (:class:`repro.core.dmm_jax.ShardedFusedDMM.src3d`), device-placed with
+    its leading shard axis over the mesh ``data`` axis; ``rows``/``blks``
+    are (n_shards, S_loc) per-shard routing tables in the same layout.
+    Returns the stacked (n_shards, S_loc, W) outputs; reading them back
+    (``np.asarray``) is the all-gather of emitted rows.
+
+    One host dispatch per chunk, one kernel execution per shard per chunk:
+    the per-shard dispatch count stays 1 exactly as in the replicated
+    engine.
+
+    impl: "fused" (Pallas kernel per shard) | "ref" (jnp oracle per shard) |
+    "auto" (fused on TPU, ref elsewhere).
+    """
+    global dispatch_count
+    dispatch_count += 1
+    if impl == "auto":
+        impl = "fused" if on_tpu() else "ref"
+    if impl not in ("ref", "fused"):
+        raise ValueError(f"unknown impl {impl!r}")
+    return _sharded_program(mesh, axis, impl, float(fill))(
+        values, mask, rows, blks, src3d
+    )
 
 
 def moe_combine(

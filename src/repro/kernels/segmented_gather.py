@@ -49,7 +49,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["segmented_gather"]
+__all__ = ["segmented_gather", "segmented_gather_shard"]
 
 LANE = 128
 SUBLANE = 8
@@ -154,3 +154,40 @@ def segmented_gather(
         interpret=interpret,
     )(rows, blks, src2d, values, mask)
     return out_v[:s], out_m[:s]
+
+
+def segmented_gather_shard(
+    values: jax.Array,
+    mask: jax.Array,
+    rows: jax.Array,
+    blks: jax.Array,
+    src3d: jax.Array,
+    *,
+    block_s: int = 256,
+    block_n: int = LANE,
+    fill: float = 0.0,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-shard body of the *sharded* fused engine -- runs INSIDE shard_map.
+
+    The sharded dispatcher (:func:`repro.kernels.ops.dmm_apply_sharded`)
+    partitions ``rows``/``blks``/``src3d`` over the mesh ``data`` axis, so
+    this body sees a leading shard axis of size 1: rows/blks (1, S_loc),
+    src3d (1, n_blocks_pad_loc, W) -- this shard's slice of the block table
+    -- while values/mask stay replicated (every shard reads the full chunk
+    payload).  One :func:`segmented_gather` launch per shard per chunk; the
+    leading axis is re-added so the stacked (n_shards, S_loc, W) output can
+    be all-gathered by the caller before row emission.
+    """
+    out_v, out_m = segmented_gather(
+        values,
+        mask,
+        rows[0],
+        blks[0],
+        src3d[0],
+        block_s=block_s,
+        block_n=block_n,
+        fill=fill,
+        interpret=interpret,
+    )
+    return out_v[None], out_m[None]

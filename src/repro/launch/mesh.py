@@ -8,7 +8,22 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_etl_mesh"]
+
+
+def _make_mesh(shape, axes):
+    """``jax.make_mesh`` across JAX versions.
+
+    Newer JAX grows ``jax.sharding.AxisType`` and a ``make_mesh`` kwarg for
+    it; this version has neither, and passing the kwarg (or touching the
+    missing enum) dies at mesh construction.  Explicit axis types only pick
+    Auto-vs-Explicit sharding mode, and Auto is the default, so the fallback
+    is simply to omit them.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,8 +35,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
@@ -29,5 +43,18 @@ def make_local_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     if data * model > n:
         raise ValueError(f"need {data*model} devices, have {n}")
-    auto = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=auto)
+    return _make_mesh((data, model), ("data", "model"))
+
+
+def make_etl_mesh(shards: int = 0):
+    """1 x N mesh for the sharded METL mapping engine (``engine="sharded"``).
+
+    The fused DMM block table shards over the ``data`` axis; ``shards=0``
+    uses every local device.  Returns a plain (data, model=1) mesh so the
+    same ShardingPolicy axis names apply.
+    """
+    n = len(jax.devices())
+    shards = shards or n
+    if shards > n:
+        raise ValueError(f"need {shards} devices for {shards} shards, have {n}")
+    return make_local_mesh(data=shards, model=1)

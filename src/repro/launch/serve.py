@@ -11,14 +11,25 @@ the request prompts -- the paper's pipeline (CDC -> DMM -> CDM) fronting the
 model server.
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b --smoke --etl
+
+``--shards N`` (with ``--etl``) switches the app to ``engine="sharded"``:
+the fused DMM block table partitions over the ``data`` axis of a 1xN mesh
+(each device holds only its slice; emitted rows are all-gathered before
+emission).  On CPU the fake N-device topology is forced via XLA_FLAGS
+*before* jax initialises, which is why the flag must be handled here in the
+entrypoint.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b --smoke \
+        --etl --shards 4
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 
 
-def _etl_prompts(n_requests: int, vocab: int, max_len: int = 16):
+def _etl_prompts(n_requests: int, vocab: int, max_len: int = 16, shards: int = 0):
     """Stream CDC events through the fused METL path into token prompts."""
     from repro.core.state import StateCoordinator
     from repro.core.synthetic import ScenarioConfig, build_scenario
@@ -27,7 +38,19 @@ def _etl_prompts(n_requests: int, vocab: int, max_len: int = 16):
 
     sc = build_scenario(ScenarioConfig(n_schemas=6, versions_per_schema=3, seed=7))
     coord = StateCoordinator(sc.registry, sc.dpm)
-    app = METLApp(coord, engine="fused")
+    if shards > 1:
+        from repro.launch.mesh import make_etl_mesh
+
+        mesh = make_etl_mesh(shards)
+        app = METLApp(coord, engine="sharded", mesh=mesh)
+        t = app._sharded
+        print(
+            f"etl: sharded engine over {shards} shards, "
+            f"{t.table_bytes_per_shard} table bytes/shard "
+            f"({t.n_blocks} blocks, {t.blocks_per_shard}/shard)"
+        )
+    else:
+        app = METLApp(coord, engine="fused")
     source = EventSource(sc.registry, seed=7)
     rows, pos = [], 0
     while len(rows) < n_requests:
@@ -53,11 +76,22 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--etl", action="store_true",
                     help="feed prompts from the fused METL mapping path")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="with --etl: shard the DMM block table over a 1xN "
+                         "mesh data axis (engine='sharded'); 0/1 = replicated")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=16)
     args = ap.parse_args()
+
+    if args.etl and args.shards > 1:
+        # must land before the first jax import: device topology is pinned
+        # at backend init (no-op on real multi-device backends)
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.shards}"
+        ).strip()
 
     import numpy as np
     import jax
@@ -71,7 +105,7 @@ def main() -> None:
     sc = ServeConfig(batch=args.batch, cache_len=args.cache_len, max_new=args.max_new)
     server = Server(params, cfg, sc)
     if args.etl:
-        prompts = _etl_prompts(args.requests, cfg.vocab)
+        prompts = _etl_prompts(args.requests, cfg.vocab, shards=args.shards)
     else:
         rng = np.random.default_rng(0)
         prompts = [

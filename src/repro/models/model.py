@@ -178,6 +178,31 @@ def _decoder_layer_train(
     return x, aux
 
 
+@jax.custom_vjp
+def _carry_barrier(carry):
+    """``optimization_barrier`` with an identity gradient.
+
+    ``jax.lax.optimization_barrier`` has no differentiation rule on this JAX
+    version, so differentiating the scanned layer body through the bare
+    primitive raises NotImplementedError.  The barrier is purely a fusion
+    fence (it computes the identity), so its VJP is the identity too; the
+    cotangent is barriered as well so the backward save buffer gets the same
+    fence as the forward one.
+    """
+    return jax.lax.optimization_barrier(carry)
+
+
+def _carry_barrier_fwd(carry):
+    return _carry_barrier(carry), None
+
+
+def _carry_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_carry_barrier.defvjp(_carry_barrier_fwd, _carry_barrier_bwd)
+
+
 def _remat(fn, cfg: ModelConfig):
     if cfg.remat == "none":
         return fn
@@ -203,7 +228,7 @@ def _scan_layers(layers: Dict, x: jax.Array, body, cfg: ModelConfig, sh=None):
             )
         # barrier: without it XLA fuses apply_norm's f32 convert into the
         # per-layer carry save buffer, storing residuals at 2x bytes
-        carry = jax.lax.optimization_barrier(carry)
+        carry = _carry_barrier(carry)
         y, aux = body(lp, carry)
         return y, aux
 

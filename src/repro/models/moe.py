@@ -166,7 +166,9 @@ def _moe_ep_local(p_local: Dict, x: jax.Array, cfg: ModelConfig, axis: str):
     this shard's E_loc experts.  Experts are sharded over ``axis``."""
     T, D = x.shape
     E, k = cfg.n_experts, cfg.top_k
-    n_shards = jax.lax.axis_size(axis)
+    from ..sharding.specs import lax_axis_size
+
+    n_shards = lax_axis_size(axis)
     E_loc = E // n_shards
     C = _capacity(T, cfg)  # capacity per (expert, source shard)
     # route locally against the full router (router weights replicated)

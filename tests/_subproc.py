@@ -1,0 +1,25 @@
+"""Shared forced-topology subprocess harness for multi-device tests.
+
+jax pins the device count at first init and the rest of the suite must see
+exactly one device (per the dry-run spec), so multi-device SPMD tests run
+their payload in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    return r.stdout
