@@ -7,11 +7,17 @@ DMM gather path and the baseline matrix (one-hot matmul) path -- the paper's
 Algorithm 6 vs Algorithm 1 story -- plus the Pallas kernel variants, and
 (c) the **fused-engine A/B**: `METLApp` consume through the legacy
 one-dispatch-per-block path vs the fused one-dispatch-per-chunk path
-(events/s and device-dispatch counts for each), and (d) the
+(events/s and device-dispatch counts for each), (d) the
 **replicated-vs-sharded A/B**: the fused engine against `engine="sharded"`
 (block table partitioned over the mesh ``data`` axis) per shard count, with
 per-shard table bytes ~ total/N.  The sharded rows run in a subprocess with
 a forced N-device CPU topology (jax pins the device count at first init).
+And (e) the **sync-vs-async pipeline A/B**: the streaming Pipeline over the
+same chunk stream with and without double-buffered consume (chunk N+1's
+host densification overlapped with chunk N's device dispatch).
+
+This benchmark is also a CI gate: it exits non-zero if the fused engine's
+dispatches-per-chunk regress above 1 (direct consume or async pipeline).
 
 Standalone smoke entry point (used by scripts/ci.sh):
 
@@ -37,13 +43,18 @@ from repro.kernels import ops
 
 from common import bench
 
+# CI gate (scripts/ci.sh runs --smoke): run() appends a message here whenever
+# a dispatch-count contract breaks (fused consume or async pipeline above 1
+# dispatch/chunk); __main__ then exits non-zero so the build fails.
+GATE_FAILURES: list = []
+
 
 def _consume_bench(app: METLApp, events, *, warmup: int = 1, iters: int = 5):
     """Time repeated consume of one chunk, resetting dedup between calls
     (otherwise every iteration after the first measures the dedup-drop path).
     Returns (us_per_call, device dispatches per chunk)."""
     def call():
-        app._seen.clear()
+        app.reset_dedup()
         return app.consume(events)
 
     us = bench(call, warmup=warmup, iters=iters)
@@ -76,12 +87,12 @@ def sharded_worker(shards: int, smoke: bool) -> list:
 
     app_rep = METLApp(coord, engine="fused")
     us_rep, _ = _consume_bench(app_rep, events, iters=iters)
-    total_bytes = int(np.asarray(app_rep._fused.src2d).nbytes)
+    total_bytes = app_rep.engine.info()["table_bytes"]
 
     mesh = make_etl_mesh(shards)
     app_sh = METLApp(coord, engine="sharded", mesh=mesh)
     us_sh, disp = _consume_bench(app_sh, events, iters=iters)
-    t = app_sh._sharded
+    info = app_sh.engine.info()
     rows.append((
         f"mapping/metl_consume_sharded_{shards}sh_{n_events}ev",
         us_sh,
@@ -91,10 +102,10 @@ def sharded_worker(shards: int, smoke: bool) -> list:
     ))
     rows.append((
         f"mapping/sharded_table_bytes_{shards}sh",
-        float(t.table_bytes_per_shard),
-        f"{t.table_bytes_per_shard} B/shard vs {total_bytes} B replicated "
+        float(info["table_bytes_per_shard"]),
+        f"{info['table_bytes_per_shard']} B/shard vs {total_bytes} B replicated "
         f"(total/{shards} = {total_bytes / shards:.0f}; "
-        f"{t.blocks_per_shard}/{t.n_blocks} blocks per shard)",
+        f"{info['blocks_per_shard']}/{info['n_blocks']} blocks per shard)",
     ))
     return rows
 
@@ -170,6 +181,54 @@ def run(smoke: bool = False) -> list:
         f"{n_events / (us_fused / 1e6):.0f} events/s, {disp_fused} dispatch/chunk, "
         f"{us_blocks / us_fused:.1f}x vs per-block",
     ))
+    if disp_fused > 1:
+        GATE_FAILURES.append(
+            f"fused engine regressed to {disp_fused} dispatches/chunk (want <= 1)"
+        )
+
+    # -- streaming pipeline: sync vs double-buffered async consume ------------
+    # Same chunks, same app config; the A/B isolates the overlap of chunk
+    # N+1's host-side densification with chunk N's device dispatch.
+    from repro.etl import CollectSink, ListSource, Pipeline
+
+    n_chunks = 8 if smoke else 6
+    chunks = [src.slice(50_000 + k * n_events, n_events) for k in range(n_chunks)]
+    total_ev = n_chunks * n_events
+    app_pipe = METLApp(coord, engine="fused")
+
+    def pipe_run(async_consume):
+        app_pipe.reset_dedup()
+        sink = CollectSink()
+        Pipeline(ListSource(chunks), app_pipe, [sink],
+                 async_consume=async_consume).run()
+        return sink.rows
+
+    # the pipeline pass is cheap (~tens of ms) but the A/B margin is ~10-30%,
+    # so use enough samples for a stable median regardless of the smoke iters
+    pipe_iters = max(iters, 11)
+    us_psync = bench(lambda: pipe_run(False), warmup=2, iters=pipe_iters)
+    us_pasync = bench(lambda: pipe_run(True), warmup=2, iters=pipe_iters)
+    before = app_pipe.stats["dispatches"]
+    pipe_run(True)
+    disp_async = (app_pipe.stats["dispatches"] - before) / n_chunks
+    rows.append((
+        f"mapping/pipeline_sync_{n_chunks}x{n_events}ev",
+        us_psync,
+        f"{total_ev / (us_psync / 1e6):.0f} events/s",
+    ))
+    rows.append((
+        f"mapping/pipeline_async_{n_chunks}x{n_events}ev",
+        us_pasync,
+        f"{total_ev / (us_pasync / 1e6):.0f} events/s, "
+        f"{us_psync / us_pasync:.2f}x vs sync, "
+        f"{disp_async:.0f} dispatch/chunk",
+    ))
+    if disp_async > 1:
+        # an unmappable chunk legitimately issues 0 dispatches; only a
+        # ratio above 1/chunk is a fused-engine regression
+        GATE_FAILURES.append(
+            f"async pipeline consume issued {disp_async} dispatches/chunk (want <= 1)"
+        )
 
     # -- replicated vs sharded A/B (subprocess per shard count) ---------------
     for shards in ((2,) if smoke else (2, 4, 8)):
@@ -193,3 +252,7 @@ if __name__ == "__main__":
     print("name,us_per_call,derived")
     for name, us, derived in run(smoke=args.smoke):
         print(f"{name},{us:.1f},{derived}", flush=True)
+    if GATE_FAILURES:
+        for msg in GATE_FAILURES:
+            print(f"GATE FAILURE: {msg}", file=sys.stderr)
+        sys.exit(1)

@@ -3,7 +3,10 @@
 The full pipeline of DESIGN §2: synthetic microservice databases emit CDC
 events; METL maps them to the canonical data model with the compacted DMM;
 the batcher tokenizes canonical rows into the trainer's canonical batch
-schema; an LM trains on the mapped stream, with checkpoint/restart.
+schema; an LM trains on the mapped stream, with checkpoint/restart.  The
+ETL side runs on the streaming Pipeline API (EventChunkSource -> METLApp ->
+BatcherSink) with double-buffered async consume; BatcherSink backpressure
+stops the pull whenever the trainer has a full batch buffered.
 
 Defaults are CPU-sized.  On a pod, the same driver scales by (a) passing a
 production mesh and (b) raising --model-scale: ``--model-scale 100m`` builds
@@ -21,7 +24,14 @@ import jax.numpy as jnp
 import repro.configs as C
 from repro.core.state import StateCoordinator
 from repro.core.synthetic import ScenarioConfig, build_scenario
-from repro.etl import CanonicalBatcher, EventSource, METLApp
+from repro.etl import (
+    BatcherSink,
+    CanonicalBatcher,
+    EventChunkSource,
+    EventSource,
+    METLApp,
+    Pipeline,
+)
 from repro.train.loop import TrainConfig, train
 from repro.train.optimizer import AdamWConfig
 
@@ -42,21 +52,28 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
-    # -- the ETL side ---------------------------------------------------------
+    # -- the ETL side: CDC stream -> METL pipeline -> BatcherSink -------------
     sc = build_scenario(ScenarioConfig(n_schemas=12, versions_per_schema=4, seed=0))
     coord = StateCoordinator(sc.registry, sc.dpm)
     app = METLApp(coord)
-    source = EventSource(sc.registry, seed=0, p_duplicate=0.05)
 
     vocab = 8192
     batcher = CanonicalBatcher(vocab=vocab, seq_len=args.seq, batch_size=args.batch)
-    cursor = {"pos": 0}
+    # BatcherSink reports full() once a batch is buffered, so each
+    # pipe.run() pulls exactly until the trainer can step; the source
+    # cursor persists across calls (double-buffered async consume)
+    pipe = Pipeline(
+        EventChunkSource(
+            EventSource(sc.registry, seed=0, p_duplicate=0.05), chunk_size=512
+        ),
+        app,
+        [BatcherSink(batcher)],
+        async_consume=True,
+    )
 
     def batch_fn(step):
         while not batcher.ready():
-            rows = app.consume(source.slice(cursor["pos"], 512))
-            batcher.add_rows(rows)
-            cursor["pos"] += 512
+            pipe.run()
         return batcher.next_batch()
 
     # -- the model side -------------------------------------------------------

@@ -8,9 +8,17 @@
 #    so there is no known-failure allowance any more; this includes the
 #    tier-1 set (ROADMAP.md), the multi-device subprocess tests, and the
 #    sharded-vs-replicated fused-consume parity tests;
-# 2. a tiny-shape run of the mapping benchmark so the fused- and
-#    sharded-engine perf paths (kernel, shard_map dispatcher, consume)
-#    can't rot silently even when no test exercises the timing harness.
+# 2. an API-hygiene gate: no private METLApp reach-ins (``app._``) outside
+#    the repro.etl package -- launchers/benchmarks must use the public
+#    engine protocol (``app.engine.info()``, ``app.reset_dedup()``);
+# 3. the streaming-pipeline example (two sinks, async double-buffered
+#    consume) as an end-to-end smoke of the Pipeline API;
+# 4. a tiny-shape run of the mapping benchmark so the fused- and
+#    sharded-engine perf paths (kernel, shard_map dispatcher, consume,
+#    sync-vs-async pipeline) can't rot silently even when no test exercises
+#    the timing harness.  bench_mapping itself exits non-zero if the fused
+#    engine's dispatches-per-chunk regress above 1 (direct consume or async
+#    pipeline), failing this gate.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,5 +27,19 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== full suite (tier-1 + distributed + sharded parity; 0 failures) =="
 python -m pytest -q
 
-echo "== benchmark smoke (fused + sharded mapping engine) =="
+echo "== API hygiene (no private METLApp reach-ins outside etl/) =="
+# two patterns: any variable literally named app*, and the known private
+# attribute names on ANY receiver (catches app_rep._fused, shd._sharded, ...)
+if git grep -nE "app\._|[A-Za-z0-9_)\]]\._(fused|sharded|compiled|seen|parked|replay_rows|snapshot|dedup_window|is_duplicate)\b" \
+    -- src benchmarks ':!src/repro/etl'; then
+  echo "FAIL: private METLApp attributes reached from outside repro.etl" >&2
+  echo "      (use app.engine.info() / app.reset_dedup() instead)" >&2
+  exit 1
+fi
+echo "clean"
+
+echo "== pipeline example (two sinks, async double-buffered consume) =="
+python examples/pipeline_stream.py --chunks 4 --prompts 500
+
+echo "== benchmark smoke (fused + sharded engine, sync-vs-async pipeline) =="
 python benchmarks/bench_mapping.py --smoke

@@ -1,3 +1,23 @@
 from .events import CDCEvent, EventSource  # noqa: F401
-from .metl import METLApp  # noqa: F401
+from .engines import (  # noqa: F401
+    BlocksEngine,
+    FusedEngine,
+    MappingEngine,
+    ShardedEngine,
+    make_engine,
+    register_engine,
+)
+from .metl import CanonicalRow, METLApp  # noqa: F401
 from .batcher import CanonicalBatcher, make_token_batch  # noqa: F401
+from .pipeline import (  # noqa: F401
+    BatcherSink,
+    CollectSink,
+    EventChunkSource,
+    ListSource,
+    Pipeline,
+    PipelineStats,
+    RowSink,
+    Source,
+    TableSink,
+    TokenizerSink,
+)

@@ -1,0 +1,572 @@
+"""Pluggable mapping engines: the device side of the METL app.
+
+A :class:`MappingEngine` owns the compiled representation of the state-``i``
+DPM and maps *triaged* event chunks (``(schema, version) -> [CDCEvent]``
+groups, produced by :meth:`repro.etl.metl.METLApp.triage`) to canonical rows
+through four explicit stages:
+
+    compile(snapshot, registry)   build the device plan for one state
+    densify(groups)               host side: payload tensors + routing
+    dispatch(dense)               device side: launch, return an UNBLOCKED
+                                  handle (jax async dispatch: the output
+                                  arrays are futures)
+    emit(handle)                  the only sync point: read back, slice each
+                                  surviving row to its block's true width
+
+The stage boundary is the seam the streaming pipeline
+(:mod:`repro.etl.pipeline`) exploits for double-buffered async consume:
+densify is pure host work (numpy), dispatch never blocks, so chunk N+1's
+densification can overlap chunk N's device execution.  Each
+:class:`DenseChunk` captures the plan it was densified against, so a state
+bump between stages can never mix plans.
+
+Engines register by name (:func:`register_engine`) and are built through
+:func:`make_engine`, which also resolves the legacy routing rules:``impl=
+"onehot"`` has no fused realisation and routes to the per-block engine, and
+``engine="sharded"`` on a 1-shard (or absent) mesh degenerates to the
+replicated fused engine.
+
+Built-in engines:
+
+  ``fused``    :class:`FusedEngine` -- the whole chunk is densified into one
+      payload tensor and mapped across ALL its blocks in ONE device dispatch
+      (:func:`repro.kernels.ops.dmm_apply_fused` over the state's
+      :class:`repro.core.dmm_jax.FusedDMM` block table);
+
+  ``sharded``  :class:`ShardedEngine` -- the fused path with the block table
+      partitioned over the mesh ``data`` axis
+      (:class:`repro.core.dmm_jax.ShardedFusedDMM`); per-shard routing is
+      split host-side in densify (overlappable), one shard_map launch per
+      chunk, emitted rows all-gathered in emit -- bit-exact with ``fused``;
+
+  ``blocks``   :class:`BlocksEngine` -- the legacy per-block path (one
+      masked gather per compacted block per column), kept for A/B
+      benchmarking and as the only realisation of ``impl="onehot"``.
+
+``info()`` is the public observability surface (engine name, shard count,
+block count, device-resident table bytes, cumulative dispatches) -- callers
+must use it instead of reaching into private engine state.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple, Type
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..core.dmm_jax import (
+    CompiledDMM,
+    FusedDMM,
+    ShardedFusedDMM,
+    bucket_rows,
+    compile_dpm,
+    compile_fused,
+    compile_fused_sharded,
+)
+from ..core.registry import Registry
+from ..core.state import SystemState
+from ..kernels.ops import dmm_apply, dmm_apply_fused, dmm_apply_sharded
+from .events import CDCEvent
+
+__all__ = [
+    "CanonicalRow",
+    "Groups",
+    "DenseChunk",
+    "DispatchHandle",
+    "MappingEngine",
+    "FusedEngine",
+    "ShardedEngine",
+    "BlocksEngine",
+    "ENGINES",
+    "register_engine",
+    "make_engine",
+]
+
+
+CanonicalRow = Tuple[Tuple[int, int], np.ndarray, np.ndarray, int]
+# ((business entity r, version w), values (n_out,), mask (n_out,), event key)
+
+Groups = Dict[Tuple[int, int], List[CDCEvent]]
+# triaged chunk: (schema o, version v) -> mappable events, in arrival order
+
+
+@dataclasses.dataclass
+class DenseChunk:
+    """One densified chunk: payload tensors plus (row, block) routing.
+
+    ``plan`` pins the engine plan the chunk was densified against so
+    dispatch/emit stay consistent even if the engine recompiles (state bump)
+    while the chunk is in flight.
+    """
+
+    plan: Any
+    vals: np.ndarray  # (bucket(n_events), n_in_pad) f32
+    mask: np.ndarray  # (bucket(n_events), n_in_pad) i8
+    row_ids: np.ndarray  # (S,) i32: event row per output row
+    blk_ids: np.ndarray  # (S,) i32: global block per output row
+    out_events: List[CDCEvent]  # event per output row (emission order)
+    # sharded extras (per-shard routing split, filled by ShardedEngine)
+    shard_sel: Optional[List[np.ndarray]] = None
+    rows_sh: Optional[np.ndarray] = None  # (n_shards, S_loc) i32
+    blks_sh: Optional[np.ndarray] = None  # (n_shards, S_loc) i32
+
+
+@dataclasses.dataclass
+class DispatchHandle:
+    """An in-flight device dispatch.
+
+    ``outputs`` are unblocked jax arrays (futures under async dispatch) --
+    or, for the per-block engine, a list of per-block output pairs.  The
+    handle is consumed exactly once by :meth:`MappingEngine.emit`, the only
+    stage that synchronises with the device.
+    """
+
+    outputs: Any
+    dense: Any
+
+
+def _densify_chunk(plan, groups: Groups) -> Optional[DenseChunk]:
+    """Chunk densification shared by the fused and sharded engines.
+
+    Collects (row, slot, value) triples with one Python pass over the
+    *present* payload items against the plan table's uid -> slot lookup,
+    lands them in one numpy scatter per (o, v) group, and builds the
+    (row, block) routing in legacy emission order (per column, per block,
+    per event).  Returns None for an unmappable chunk (zero dispatches).
+    """
+    # columns with no mapping paths contribute no output rows (exactly the
+    # legacy behaviour: the per-block loop body never runs)
+    cols = [
+        (col, evs)
+        for (o, v), evs in groups.items()
+        if (col := plan.column(o, v)) is not None and col.block_ids.size
+    ]
+    if not cols:
+        return None
+
+    n_events = sum(len(evs) for _, evs in cols)
+    vals = np.zeros((bucket_rows(n_events), plan.n_in_pad), np.float32)
+    mask = np.zeros_like(vals, dtype=np.int8)
+    row_parts: List[np.ndarray] = []
+    blk_parts: List[np.ndarray] = []
+    out_events: List[CDCEvent] = []
+    base = 0
+    for col, evs in cols:
+        lookup = col.uid_pos
+        r_idx: List[int] = []
+        c_idx: List[int] = []
+        v_buf: List[float] = []
+        for b, ev in enumerate(evs):
+            for uid, val in ev.payload().items():
+                if val is None:
+                    continue
+                pos = lookup.get(uid)
+                if pos is not None:
+                    r_idx.append(base + b)
+                    c_idx.append(pos)
+                    v_buf.append(val)
+        if r_idx:
+            vals[r_idx, c_idx] = v_buf
+            mask[r_idx, c_idx] = 1
+        # output rows in legacy emission order: per block, then per event
+        ev_rows = np.arange(base, base + len(evs), dtype=np.int32)
+        for t in col.block_ids:
+            row_parts.append(ev_rows)
+            blk_parts.append(np.full(len(evs), t, np.int32))
+            out_events.extend(evs)
+        base += len(evs)
+
+    return DenseChunk(
+        plan=plan,
+        vals=vals,
+        mask=mask,
+        row_ids=np.concatenate(row_parts),
+        blk_ids=np.concatenate(blk_parts),
+        out_events=out_events,
+    )
+
+
+def _emit_rows(plan, ov, om, blk_ids, out_events, stats) -> List[CanonicalRow]:
+    """Row emission shared by the fused and sharded engines: one
+    ``any``/``nonzero`` over the gathered output mask, then slice each
+    surviving row to its block's true width."""
+    rows: List[CanonicalRow] = []
+    emit = np.nonzero(om.any(axis=1))[0]  # only non-empty outgoing messages
+    stats["mapped"] += int(emit.size)
+    stats["empty"] += int(blk_ids.size - emit.size)
+    routes, n_out = plan.routes, plan.n_out
+    for i in emit:
+        t = int(blk_ids[i])
+        no = int(n_out[t])
+        rows.append((routes[t], ov[i, :no], om[i, :no], out_events[i].key))
+    return rows
+
+
+class MappingEngine:
+    """Protocol base for pluggable mapping engines.
+
+    Subclasses implement ``_compile_plan`` plus the three chunk stages
+    (``densify`` / ``dispatch`` / ``emit``) and ``info``.  ``stats`` is the
+    shared counter the owning :class:`~repro.etl.metl.METLApp` injects, so
+    engine-side accounting (``dispatches`` / ``mapped`` / ``empty``) lands
+    in the app's ``stats``.
+    """
+
+    name: str = "base"
+
+    def __init__(self, *, impl: str = "ref", stats: Optional[collections.Counter] = None):
+        self.impl = impl
+        self.stats = stats if stats is not None else collections.Counter()
+        self.compiled: Optional[CompiledDMM] = None
+        self.plan: Any = None
+
+    # -- plan lifecycle -----------------------------------------------------
+    @property
+    def ready(self) -> bool:
+        return self.plan is not None
+
+    def compile(self, snapshot: SystemState, registry: Registry):
+        """Build (and retain) the device plan for one state snapshot."""
+        self.compiled = compile_dpm(snapshot.dpm, registry)
+        self.plan = self._compile_plan(self.compiled, registry)
+        return self.plan
+
+    def evict(self) -> None:
+        """Drop every state-derived cache (the Caffeine analogue)."""
+        self.compiled = None
+        self.plan = None
+
+    def _compile_plan(self, compiled: CompiledDMM, registry: Registry):
+        raise NotImplementedError
+
+    # -- chunk stages --------------------------------------------------------
+    def densify(self, groups: Groups):
+        """Host-side densification; returns an engine-specific dense chunk
+        or None when the chunk touches no mapping path."""
+        raise NotImplementedError
+
+    def dispatch(self, dense) -> DispatchHandle:
+        """Launch the device work for one dense chunk WITHOUT blocking on
+        it; increments ``stats['dispatches']`` once per launch."""
+        raise NotImplementedError
+
+    def emit(self, handle: DispatchHandle) -> List[CanonicalRow]:
+        """Synchronise on a dispatch handle and emit canonical rows."""
+        raise NotImplementedError
+
+    # -- conveniences --------------------------------------------------------
+    def consume_groups(self, groups: Groups) -> List[CanonicalRow]:
+        """Synchronous densify -> dispatch -> emit of one triaged chunk."""
+        dense = self.densify(groups)
+        if dense is None:
+            return []
+        return self.emit(self.dispatch(dense))
+
+    def info(self) -> Dict[str, Any]:
+        """Public observability: engine name, shards, blocks, device-resident
+        table bytes, cumulative dispatch count.  The supported way for
+        launchers/benchmarks to read engine state (no private reach-ins)."""
+        raise NotImplementedError
+
+
+# -- engine registry ---------------------------------------------------------
+
+ENGINES: Dict[str, Type[MappingEngine]] = {}
+
+
+def register_engine(name: str):
+    """Class decorator: register a :class:`MappingEngine` under ``name`` so
+    ``METLApp(..., engine=name)`` resolves it through :func:`make_engine`."""
+
+    def deco(cls: Type[MappingEngine]) -> Type[MappingEngine]:
+        cls.name = name
+        ENGINES[name] = cls
+        return cls
+
+    return deco
+
+
+def make_engine(
+    engine="fused",
+    *,
+    impl: str = "ref",
+    mesh=None,
+    stats: Optional[collections.Counter] = None,
+) -> MappingEngine:
+    """Resolve an engine name (or pass through an instance) to a ready
+    :class:`MappingEngine`.
+
+    Legacy routing rules, preserved from the pre-protocol METLApp:
+
+      * ``impl="onehot"`` only exists as a per-block kernel, so it routes to
+        the ``blocks`` engine rather than silently changing the benched path;
+      * ``engine="sharded"`` needs >1 shard on the mesh ``data`` axis;
+        otherwise it degenerates to the replicated fused engine.
+    """
+    if isinstance(engine, MappingEngine):
+        # an instance carries its own impl/mesh; silently overriding (or
+        # dropping) conflicting kwargs would run a different path than asked
+        if impl != "ref" and impl != engine.impl:
+            raise ValueError(
+                f"impl={impl!r} conflicts with engine instance impl={engine.impl!r}; "
+                "configure the instance instead"
+            )
+        if mesh is not None and getattr(engine, "mesh", None) is not mesh:
+            raise ValueError(
+                "mesh= conflicts with the engine instance; construct the "
+                "engine with its mesh instead"
+            )
+        if stats is not None:
+            engine.stats = stats
+        return engine
+    if engine not in ENGINES:
+        raise ValueError(
+            f"unknown engine {engine!r} (registered: {sorted(ENGINES)})"
+        )
+    if impl == "onehot" and engine in ("fused", "sharded"):
+        return ENGINES["blocks"](impl=impl, stats=stats)
+    if engine == "sharded":
+        n_shards = int(mesh.shape["data"]) if mesh is not None else 1
+        if n_shards <= 1:
+            return ENGINES["fused"](impl=impl, stats=stats)
+        return ENGINES["sharded"](mesh=mesh, impl=impl, stats=stats)
+    return ENGINES[engine](impl=impl, stats=stats)
+
+
+# -- the fused engine ---------------------------------------------------------
+
+
+@register_engine("fused")
+class FusedEngine(MappingEngine):
+    """One fused dispatch for the whole chunk (all columns, all blocks)."""
+
+    def _compile_plan(self, compiled: CompiledDMM, registry: Registry) -> FusedDMM:
+        return compile_fused(compiled, registry)
+
+    def densify(self, groups: Groups) -> Optional[DenseChunk]:
+        return _densify_chunk(self.plan, groups)
+
+    def dispatch(self, dense: DenseChunk) -> DispatchHandle:
+        fused = dense.plan
+        s = dense.row_ids.size
+        s_pad = bucket_rows(s)
+        impl = {"gather": "fused"}.get(self.impl, self.impl)
+        outputs = dmm_apply_fused(
+            jnp.asarray(dense.vals),
+            jnp.asarray(dense.mask),
+            jnp.asarray(np.pad(dense.row_ids, (0, s_pad - s))),
+            jnp.asarray(np.pad(dense.blk_ids, (0, s_pad - s))),
+            fused.src2d,
+            impl=impl,
+        )
+        self.stats["dispatches"] += 1
+        return DispatchHandle(outputs=outputs, dense=dense)
+
+    def emit(self, handle: DispatchHandle) -> List[CanonicalRow]:
+        dense = handle.dense
+        s = dense.row_ids.size
+        ov = np.asarray(handle.outputs[0])[:s]  # the sync point
+        om = np.asarray(handle.outputs[1])[:s]
+        return _emit_rows(dense.plan, ov, om, dense.blk_ids, dense.out_events, self.stats)
+
+    def info(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {
+            "engine": self.name,
+            "impl": self.impl,
+            "n_shards": 1,
+            "dispatches": int(self.stats["dispatches"]),
+        }
+        if self.plan is not None:
+            p = self.plan
+            table_bytes = int(p.src2d.nbytes)
+            d.update(
+                state=p.state,
+                n_blocks=p.n_blocks,
+                blocks_per_shard=p.n_blocks,
+                width=p.width,
+                table_bytes=table_bytes,
+                table_bytes_per_shard=table_bytes,
+            )
+        return d
+
+
+# -- the sharded engine -------------------------------------------------------
+
+
+@register_engine("sharded")
+class ShardedEngine(MappingEngine):
+    """The fused path with the block table sharded over the mesh ``data``
+    axis: per-shard routing split in densify (host work, overlappable), one
+    shard_map launch per chunk (one kernel execution per shard), then an
+    all-gather of the emitted dense rows in emit and the shared emission
+    pass in global (replicated-engine) order -- bit-exact with ``fused``."""
+
+    def __init__(self, *, mesh, impl: str = "ref", stats=None):
+        super().__init__(impl=impl, stats=stats)
+        if mesh is None:
+            raise ValueError("engine='sharded' needs a mesh (make_etl_mesh)")
+        self.mesh = mesh
+        self.n_shards = int(mesh.shape["data"])
+
+    def _compile_plan(self, compiled: CompiledDMM, registry: Registry) -> ShardedFusedDMM:
+        # each device gets only its slice of the block table; the replicated
+        # FusedDMM is never materialised on this path
+        return compile_fused_sharded(compiled, registry, mesh=self.mesh)
+
+    def densify(self, groups: Groups) -> Optional[DenseChunk]:
+        dense = _densify_chunk(self.plan, groups)
+        if dense is None:
+            return None
+        # split the global (row, block) routing by owning shard; the
+        # contiguous block partition makes ownership a divide, and each
+        # shard's selection preserves global order for the scatter-back
+        sh = dense.plan
+        per = sh.blocks_per_shard
+        owner = dense.blk_ids // per
+        sel = [np.nonzero(owner == s)[0] for s in range(sh.n_shards)]
+        s_pad = bucket_rows(max(len(idx) for idx in sel))
+        rows_sh = np.zeros((sh.n_shards, s_pad), np.int32)
+        blks_sh = np.zeros((sh.n_shards, s_pad), np.int32)
+        for s, idx in enumerate(sel):
+            rows_sh[s, : len(idx)] = dense.row_ids[idx]
+            blks_sh[s, : len(idx)] = dense.blk_ids[idx] - s * per
+        dense.shard_sel, dense.rows_sh, dense.blks_sh = sel, rows_sh, blks_sh
+        return dense
+
+    def dispatch(self, dense: DenseChunk) -> DispatchHandle:
+        sh = dense.plan
+        impl = {"gather": "fused"}.get(self.impl, self.impl)
+        outputs = dmm_apply_sharded(
+            jnp.asarray(dense.vals),
+            jnp.asarray(dense.mask),
+            jnp.asarray(dense.rows_sh),
+            jnp.asarray(dense.blks_sh),
+            sh.src3d,
+            mesh=sh.mesh,
+            impl=impl,
+        )
+        self.stats["dispatches"] += 1
+        return DispatchHandle(outputs=outputs, dense=dense)
+
+    def emit(self, handle: DispatchHandle) -> List[CanonicalRow]:
+        dense = handle.dense
+        sh = dense.plan
+        # all-gather: pull every shard's emitted dense rows to the host and
+        # scatter them back to the global output order
+        ov = np.asarray(handle.outputs[0])
+        om = np.asarray(handle.outputs[1])
+        gv = np.zeros((dense.row_ids.size, sh.width), ov.dtype)
+        gm = np.zeros((dense.row_ids.size, sh.width), om.dtype)
+        for s, idx in enumerate(dense.shard_sel):
+            gv[idx] = ov[s, : len(idx)]
+            gm[idx] = om[s, : len(idx)]
+        return _emit_rows(sh, gv, gm, dense.blk_ids, dense.out_events, self.stats)
+
+    def info(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {
+            "engine": self.name,
+            "impl": self.impl,
+            "n_shards": self.n_shards,
+            "dispatches": int(self.stats["dispatches"]),
+        }
+        if self.plan is not None:
+            p = self.plan
+            d.update(
+                state=p.state,
+                n_blocks=p.n_blocks,
+                blocks_per_shard=p.blocks_per_shard,
+                width=p.width,
+                table_bytes=int(p.src3d.nbytes),
+                table_bytes_per_shard=p.table_bytes_per_shard,
+            )
+        return d
+
+
+# -- the legacy per-block engine ----------------------------------------------
+
+
+@dataclasses.dataclass
+class BlockDense:
+    """Per-column dense payloads for the legacy engine: one (vals, mask)
+    pair per (schema, version) group, mapped block-by-block in dispatch."""
+
+    plan: CompiledDMM
+    groups: List[Tuple[Tuple[int, int], List[CDCEvent], np.ndarray, np.ndarray]]
+
+
+@register_engine("blocks")
+class BlocksEngine(MappingEngine):
+    """Legacy engine: one device dispatch per block per (o, v) group.  Kept
+    for A/B benchmarking and as the only realisation of ``impl="onehot"``."""
+
+    def __init__(self, *, impl: str = "ref", stats=None):
+        super().__init__(impl=impl, stats=stats)
+        self._registry: Optional[Registry] = None
+
+    def _compile_plan(self, compiled: CompiledDMM, registry: Registry) -> CompiledDMM:
+        self._registry = registry
+        return compiled  # the per-block plan IS the compiled DPM
+
+    def densify(self, groups: Groups) -> Optional[BlockDense]:
+        if not groups:
+            return None
+        reg = self._registry
+        out = []
+        for (o, v), evs in groups.items():
+            sv = reg.domain.get(o, v)
+            uids = sv.uids
+            vals = np.zeros((len(evs), len(uids)), np.float32)
+            mask = np.zeros((len(evs), len(uids)), np.int8)
+            for b, ev in enumerate(evs):
+                payload = ev.message().payload
+                for k, uid in enumerate(uids):
+                    val = payload.get(uid)
+                    if val is not None:
+                        vals[b, k] = val
+                        mask[b, k] = 1
+            out.append(((o, v), evs, vals, mask))
+        return BlockDense(plan=self.plan, groups=out)
+
+    def dispatch(self, dense: BlockDense) -> DispatchHandle:
+        outputs = []
+        for (o, v), evs, vals, mask in dense.groups:
+            jv, jm = jnp.asarray(vals), jnp.asarray(mask)
+            for block in dense.plan.column(o, v):
+                ov, om = dmm_apply(jv, jm, block.src, impl=self.impl)
+                self.stats["dispatches"] += 1
+                outputs.append((block, evs, ov, om))
+        return DispatchHandle(outputs=outputs, dense=dense)
+
+    def emit(self, handle: DispatchHandle) -> List[CanonicalRow]:
+        rows: List[CanonicalRow] = []
+        for block, evs, ov, om in handle.outputs:
+            ov, om = np.asarray(ov), np.asarray(om)  # the sync point
+            r, w = block.key[2], block.key[3]
+            for b, ev in enumerate(evs):
+                if om[b].any():  # only non-empty outgoing messages
+                    rows.append(((r, w), ov[b, : block.n_out], om[b, : block.n_out], ev.key))
+                    self.stats["mapped"] += 1
+                else:
+                    self.stats["empty"] += 1
+        return rows
+
+    def info(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {
+            "engine": self.name,
+            "impl": self.impl,
+            "n_shards": 1,
+            "dispatches": int(self.stats["dispatches"]),
+        }
+        if self.plan is not None:
+            blocks = [b for col in self.plan.by_column.values() for b in col]
+            d.update(
+                state=self.plan.state,
+                n_blocks=self.plan.n_blocks,
+                blocks_per_shard=self.plan.n_blocks,
+                table_bytes=int(sum(b.src.nbytes for b in blocks)),
+                table_bytes_per_shard=int(sum(b.src.nbytes for b in blocks)),
+            )
+        return d

@@ -1,82 +1,64 @@
 """The METL app: consume CDC events, map them to the CDM, emit canonical rows.
 
-This is the paper's microservice re-housed as a library component of the
-training framework.  Responsibilities (paper SS3.4, SS5.5, SS6):
+This is the paper's microservice re-housed as a library component, split in
+two since the engine/pipeline redesign:
 
-  * state sync: every event's state ``i`` is checked against the app's
-    snapshot; stale events either raise (strict) or trigger a refresh from
-    the coordinator (the semi-automated error/update path);
-  * at-least-once tolerance: duplicate payload keys within a sliding window
-    are dropped before mapping;
-  * the mapping itself, through one of two engines:
+  * **METLApp (this module)** is the *stream-side* facade.  It owns every
+    per-event responsibility -- state sync (paper SS3.4: stale events raise
+    in strict mode, or park/dead-letter on the semi-automated error path),
+    at-least-once dedup over a sliding key window, parked-event replay after
+    a refresh, and dead-letter offset reset -- and exposes them as
+    :meth:`METLApp.triage`, which buckets the surviving events into
+    ``(schema, version) -> [event]`` groups.
 
-      engine="fused" (default)  the whole chunk is densified into one payload
-          tensor (per-payload-item triple collection against the precomputed
-          uid -> slot lookup, then a single numpy scatter per (o, v) group)
-          and mapped across ALL its blocks in ONE device dispatch per chunk
-          (:func:`repro.kernels.ops.dmm_apply_fused` over the state's
-          :class:`repro.core.dmm_jax.FusedDMM` block table) -- the dispatch
-          count is constant per chunk, not O(#blocks);
+  * **The mapping itself lives behind the MappingEngine protocol**
+    (:mod:`repro.etl.engines`): ``compile / densify / dispatch / emit``
+    plus ``info()``.  ``METLApp(engine="fused"|"sharded"|"blocks")`` resolves
+    a registered engine through :func:`repro.etl.engines.make_engine`
+    (strings keep working; engine *instances* plug in custom
+    implementations), and :meth:`METLApp.consume` is now just
+    ``triage -> engine.consume_groups`` -- densify, one dispatch, emit.
 
-      engine="blocks"           the legacy per-block path: one masked gather
-          per compacted block per (schema, version) group.  Kept for A/B
-          benchmarking (benchmarks/bench_mapping.py) and as a fallback for
-          impl="onehot", which has no fused realisation;
+The explicit stage split is what the streaming Pipeline
+(:mod:`repro.etl.pipeline`) builds on: ``Source -> METLApp -> [Sink, ...]``
+with chunked pull, sink fan-out (DW + ML platform, paper SS5.5) and
+double-buffered async consume that overlaps chunk N+1's host-side
+densification with chunk N's device dispatch.
 
-      engine="sharded"          the fused path with the block table
-          partitioned over the mesh ``data`` axis
-          (:class:`repro.core.dmm_jax.ShardedFusedDMM`): each shard holds
-          only its slice of the table and runs the segmented gather under
-          shard_map (:func:`repro.kernels.ops.dmm_apply_sharded`), still one
-          dispatch per chunk per shard; the emitted dense rows are
-          all-gathered back to the host before row emission, bit-exact with
-          engine="fused".  Pass ``mesh=`` (e.g.
-          :func:`repro.launch.mesh.make_etl_mesh`); on a 1-device mesh the
-          app transparently falls back to the replicated fused path;
-
-    or the pure-Python Algorithm 6 (:meth:`METLApp.consume_scalar`), the
-    bit-exactness oracle for both engines;
-  * cache eviction: a state bump rebuilds the CompiledDMM + FusedDMM
-    (Caffeine analogue).
+State lifecycle: a coordinator state bump evicts the engine plan (the
+Caffeine analogue); the next consume re-snapshots and recompiles.  Parked
+events (from the app's future) replay through :meth:`refresh`; replays are
+counted only under ``stats["replayed"]``, never a second time under
+``stats["events"]``.  Dead-lettered events (from the past) are cleared by
+:meth:`reset_offset`, which returns the stream position to rewind to and
+forgets their dedup keys so the re-delivered events map.
 
 Per-chunk operands are bucketed to powers of two
 (:func:`repro.core.dmm_jax.bucket_rows`) before dispatch, so the jit cache is
 effectively keyed on (state, bucketed batch shape) and steady-state consume
-traffic never retraces.  ``stats["dispatches"]`` counts device dispatches.
+traffic never retraces.  ``stats["dispatches"]`` counts device dispatches;
+``engine.info()`` is the supported observability surface (table bytes,
+shards, dispatch count) -- external code must not reach into private
+attributes (CI grep-gates ``app._`` outside this package).
 """
 
 from __future__ import annotations
 
 import collections
-from typing import Dict, Iterable, List, Optional, Tuple
-
-import numpy as np
-import jax.numpy as jnp
+from typing import Iterable, List, Optional, Union
 
 from ..core.dmm import Message, map_message_dense
-from ..core.dmm_jax import (
-    CompiledDMM,
-    FusedDMM,
-    ShardedFusedDMM,
-    bucket_rows,
-    compile_dpm,
-    compile_fused,
-    compile_fused_sharded,
-)
+from ..core.dmm_jax import CompiledDMM, FusedDMM, ShardedFusedDMM
 from ..core.registry import StaleStateError
 from ..core.state import StateCoordinator, SystemState
-from ..kernels.ops import dmm_apply, dmm_apply_fused, dmm_apply_sharded
+from .engines import CanonicalRow, Groups, MappingEngine, make_engine
 from .events import CDCEvent
 
 __all__ = ["METLApp", "CanonicalRow"]
 
 
-CanonicalRow = Tuple[Tuple[int, int], np.ndarray, np.ndarray, int]
-# ((business entity r, version w), values (n_out,), mask (n_out,), key)
-
-
 class METLApp:
-    """One horizontally-scaled METL instance."""
+    """One horizontally-scaled METL instance (triage facade + engine)."""
 
     def __init__(
         self,
@@ -85,35 +67,32 @@ class METLApp:
         strict_state: bool = False,
         dedup_window: int = 4096,
         impl: str = "ref",
-        engine: str = "fused",
+        engine: Union[str, MappingEngine] = "fused",
         mesh=None,
     ):
-        if engine not in ("fused", "blocks", "sharded"):
-            raise ValueError(f"unknown engine {engine!r}")
         self.coordinator = coordinator
         self.strict_state = strict_state
         self.impl = impl
-        self.engine = engine
-        # engine="sharded": the fused block table partitions over the mesh
-        # ``data`` axis.  A 1-shard mesh (or no mesh) degenerates to the
-        # replicated fused path -- same table, no shard_map wrapper.
         self.mesh = mesh
-        self._n_shards = 1
-        if engine == "sharded" and mesh is not None:
-            self._n_shards = int(mesh.shape["data"])
+        self.stats = collections.Counter()
+        # engine resolution: strings go through the registry factory (which
+        # also applies the legacy impl="onehot" -> blocks and 1-shard
+        # sharded -> fused routing); instances are adopted as-is and share
+        # the app's stats counter
+        self.engine = make_engine(engine, impl=impl, mesh=mesh, stats=self.stats)
         self._seen: collections.OrderedDict = collections.OrderedDict()
         self._dedup_window = dedup_window
         self._snapshot: Optional[SystemState] = None
-        self._compiled: Optional[CompiledDMM] = None
-        self._fused: Optional[FusedDMM] = None
-        self._sharded: Optional[ShardedFusedDMM] = None
         # error management (paper §3.4): events from the future (app behind)
         # are parked and replayed after a refresh; events from the past are
         # dead-lettered with enough info to reset the Kafka offset
         self._parked: List[CDCEvent] = []
         self.dead_letter: List[CDCEvent] = []
+        # rows produced by a replay inside a *lazy* refresh (triggered from
+        # triage/state rather than called by the user); delivered by the
+        # next consume() / take_replayed() so they are never lost
+        self._replay_rows: List[CanonicalRow] = []
         coordinator.on_evict(lambda i: self.evict())
-        self.stats = collections.Counter()
         self.refresh()
 
     # -- state management -----------------------------------------------------
@@ -121,19 +100,11 @@ class METLApp:
         """Re-snapshot the coordinator state and replay parked events.
 
         Returns canonical rows produced by the replay (empty when nothing
-        was parked)."""
+        was parked).  Replayed events are counted under ``stats["replayed"]``
+        only -- they were already counted under ``stats["events"]`` when they
+        first arrived."""
         self._snapshot = self.coordinator.snapshot()
-        self._compiled = compile_dpm(self._snapshot.dpm, self.coordinator.registry)
-        if self.engine == "sharded" and self._n_shards > 1:
-            # each device gets only its slice of the block table; the
-            # replicated FusedDMM is never materialised on this path
-            self._fused = None
-            self._sharded = compile_fused_sharded(
-                self._compiled, self.coordinator.registry, mesh=self.mesh
-            )
-        else:
-            self._fused = compile_fused(self._compiled, self.coordinator.registry)
-            self._sharded = None
+        self.engine.compile(self._snapshot, self.coordinator.registry)
         self.stats["refreshes"] += 1
         rows: List[CanonicalRow] = []
         if self._parked:
@@ -141,7 +112,7 @@ class METLApp:
             # allow re-consumption: parked events were dedup-registered
             for ev in replay:
                 self._seen.pop(ev.key, None)
-            rows = self.consume(replay)
+            rows = self.engine.consume_groups(self.triage(replay, replay=True))
             self.stats["replayed"] += len(replay)
         return rows
 
@@ -159,17 +130,39 @@ class METLApp:
 
     def evict(self) -> None:
         """Cache eviction on state change (the Caffeine analogue)."""
-        self._compiled = None
-        self._fused = None
-        self._sharded = None
+        self.engine.evict()
         self._snapshot = None
         self.stats["evictions"] += 1
 
+    def reset_dedup(self) -> None:
+        """Forget every dedup key.  For harnesses that re-consume the same
+        chunk (benchmarks time repeated consume of one slice; without this
+        every iteration after the first measures the dedup-drop path)."""
+        self._seen.clear()
+
+    def ensure_ready(self) -> None:
+        """Lazy refresh (after eviction / before first use).  Rows replayed
+        by the refresh are buffered, not dropped: the next consume() (or an
+        explicit take_replayed()) delivers them."""
+        if self._snapshot is None or not self.engine.ready:
+            self._replay_rows.extend(self.refresh())
+
+    def take_replayed(self) -> List[CanonicalRow]:
+        """Drain rows produced by parked-event replay inside a lazy refresh.
+        consume() calls this itself; callers driving the staged triage /
+        densify / dispatch / emit path (the Pipeline) must drain it after
+        emit so replayed rows reach the sinks."""
+        rows, self._replay_rows = self._replay_rows, []
+        return rows
+
     @property
     def state(self) -> int:
-        if self._snapshot is None:
-            self.refresh()
+        self.ensure_ready()
         return self._snapshot.i
+
+    @property
+    def engine_name(self) -> str:
+        return self.engine.name
 
     # -- dedup (at-least-once) -------------------------------------------------
     def _is_duplicate(self, key: int) -> bool:
@@ -181,21 +174,20 @@ class METLApp:
             self._seen.popitem(last=False)
         return False
 
-    # -- the mapping ------------------------------------------------------------
-    def consume(self, events: Iterable[CDCEvent]) -> List[CanonicalRow]:
-        """Map a chunk of events to canonical rows.
+    # -- triage + mapping --------------------------------------------------------
+    def triage(self, events: Iterable[CDCEvent], *, replay: bool = False) -> Groups:
+        """Per-event dedup / state check / parking; returns the mappable
+        events bucketed by (schema, version) for the engine.
 
-        Triage (dedup / state check / parking) is per event; the mapping
-        itself is chunk-batched through the configured engine.  The fused
-        engine issues a constant number of device dispatches per chunk (one,
-        when any mappable event is present); the legacy per-block engine
-        issues one per (column, block) pair.
-        """
-        if self._compiled is None:
-            self.refresh()
-        groups: Dict[Tuple[int, int], List[CDCEvent]] = collections.defaultdict(list)
+        With ``replay=True`` (parked events re-entering after a refresh) the
+        events are NOT re-counted under ``stats["events"]`` -- the caller
+        accounts for them under ``stats["replayed"]``."""
+        if not replay:
+            self.ensure_ready()
+        groups: Groups = collections.defaultdict(list)
         for ev in events:
-            self.stats["events"] += 1
+            if not replay:
+                self.stats["events"] += 1
             if self._is_duplicate(ev.key):
                 continue
             if ev.state != self._snapshot.i:
@@ -214,194 +206,45 @@ class METLApp:
                     self.stats["dead_lettered"] += 1
                 continue
             groups[(ev.schema_id, ev.version)].append(ev)
+        return groups
 
-        # impl="onehot" only exists as a per-block kernel; route it to the
-        # legacy engine rather than silently changing the benchmarked path
-        if self.engine == "blocks" or self.impl == "onehot":
-            return self._consume_blocks(groups)
-        if self.engine == "sharded" and self._n_shards > 1:
-            return self._consume_sharded(groups)
-        return self._consume_fused(groups)
+    def consume(self, events: Iterable[CDCEvent]) -> List[CanonicalRow]:
+        """Map a chunk of events to canonical rows.
 
-    def _densify_chunk(self, fused, groups):
-        """Chunk densification shared by the fused and sharded engines.
+        Triage (dedup / state check / parking) is per event; the mapping is
+        chunk-batched through the engine's densify -> dispatch -> emit
+        stages.  The fused engine issues a constant number of device
+        dispatches per chunk (one, when any mappable event is present); the
+        legacy per-block engine issues one per (column, block) pair.
 
-        Collects (row, slot, value) triples with one Python pass over the
-        *present* payload items against the engine table's uid -> slot
-        lookup, lands them in one numpy scatter per (o, v) group, and builds
-        the (row, block) routing in legacy emission order (per column, per
-        block, per event).  Returns ``(vals, mask, row_ids, blk_ids,
-        out_events)`` or None for an unmappable chunk.
+        If the triage tripped a lazy refresh that replayed parked events,
+        their rows are delivered first (they are the older events).
         """
-        # columns with no mapping paths contribute no output rows (exactly
-        # the legacy behaviour: the per-block loop body never runs)
-        cols = [
-            (col, evs)
-            for (o, v), evs in groups.items()
-            if (col := fused.column(o, v)) is not None and col.block_ids.size
-        ]
-        if not cols:
-            return None  # zero device dispatches for an unmappable chunk
+        rows = self.engine.consume_groups(self.triage(events))
+        replayed = self.take_replayed()
+        return replayed + rows if replayed else rows
 
-        n_events = sum(len(evs) for _, evs in cols)
-        vals = np.zeros((bucket_rows(n_events), fused.n_in_pad), np.float32)
-        mask = np.zeros_like(vals, dtype=np.int8)
-        row_parts: List[np.ndarray] = []
-        blk_parts: List[np.ndarray] = []
-        out_events: List[CDCEvent] = []
-        base = 0
-        for col, evs in cols:
-            lookup = col.uid_pos
-            r_idx: List[int] = []
-            c_idx: List[int] = []
-            v_buf: List[float] = []
-            for b, ev in enumerate(evs):
-                for uid, val in ev.payload().items():
-                    if val is None:
-                        continue
-                    pos = lookup.get(uid)
-                    if pos is not None:
-                        r_idx.append(base + b)
-                        c_idx.append(pos)
-                        v_buf.append(val)
-            if r_idx:
-                vals[r_idx, c_idx] = v_buf
-                mask[r_idx, c_idx] = 1
-            # output rows in legacy emission order: per block, then per event
-            ev_rows = np.arange(base, base + len(evs), dtype=np.int32)
-            for t in col.block_ids:
-                row_parts.append(ev_rows)
-                blk_parts.append(np.full(len(evs), t, np.int32))
-                out_events.extend(evs)
-            base += len(evs)
+    # -- test-suite back-compat shims (read-only views into the engine) --------
+    # External code must use ``self.engine`` / ``engine.info()`` instead; the
+    # CI grep gate rejects ``app._`` outside repro.etl.
+    @property
+    def _compiled(self) -> Optional[CompiledDMM]:
+        return self.engine.compiled
 
-        return vals, mask, np.concatenate(row_parts), np.concatenate(blk_parts), out_events
+    @property
+    def _fused(self) -> Optional[FusedDMM]:
+        plan = self.engine.plan
+        return plan if isinstance(plan, FusedDMM) else None
 
-    def _emit_rows(self, fused, ov, om, blk_ids, out_events) -> List[CanonicalRow]:
-        """Row emission shared by the fused and sharded engines: one
-        ``any``/``nonzero`` over the gathered output mask, then slice each
-        surviving row to its block's true width."""
-        rows: List[CanonicalRow] = []
-        emit = np.nonzero(om.any(axis=1))[0]  # only non-empty outgoing messages
-        self.stats["mapped"] += int(emit.size)
-        self.stats["empty"] += int(blk_ids.size - emit.size)
-        routes, n_out = fused.routes, fused.n_out
-        for i in emit:
-            t = int(blk_ids[i])
-            no = int(n_out[t])
-            rows.append((routes[t], ov[i, :no], om[i, :no], out_events[i].key))
-        return rows
-
-    def _consume_fused(
-        self, groups: Dict[Tuple[int, int], List[CDCEvent]]
-    ) -> List[CanonicalRow]:
-        """One fused dispatch for the whole chunk (all columns, all blocks)."""
-        fused = self._fused
-        dense = self._densify_chunk(fused, groups)
-        if dense is None:
-            return []
-        vals, mask, row_ids, blk_ids, out_events = dense
-        s = row_ids.size
-        s_pad = bucket_rows(s)
-        impl = {"gather": "fused"}.get(self.impl, self.impl)
-        ov, om = dmm_apply_fused(
-            jnp.asarray(vals),
-            jnp.asarray(mask),
-            jnp.asarray(np.pad(row_ids, (0, s_pad - s))),
-            jnp.asarray(np.pad(blk_ids, (0, s_pad - s))),
-            fused.src2d,
-            impl=impl,
-        )
-        self.stats["dispatches"] += 1
-        ov = np.asarray(ov)[:s]
-        om = np.asarray(om)[:s]
-        return self._emit_rows(fused, ov, om, blk_ids, out_events)
-
-    def _consume_sharded(
-        self, groups: Dict[Tuple[int, int], List[CDCEvent]]
-    ) -> List[CanonicalRow]:
-        """The fused path with the block table sharded over the mesh
-        ``data`` axis: per-shard routing, one shard_map launch per chunk
-        (one segmented-gather dispatch per shard), then an all-gather of the
-        emitted dense rows back to the host and the shared emission pass in
-        global (replicated-engine) order -- bit-exact with engine="fused".
-        """
-        sh = self._sharded
-        dense = self._densify_chunk(sh, groups)
-        if dense is None:
-            return []
-        vals, mask, row_ids, blk_ids, out_events = dense
-        # split the global (row, block) routing by owning shard; the
-        # contiguous block partition makes ownership a divide, and each
-        # shard's selection preserves global order for the scatter-back
-        per = sh.blocks_per_shard
-        owner = blk_ids // per
-        sel = [np.nonzero(owner == s)[0] for s in range(sh.n_shards)]
-        s_pad = bucket_rows(max(len(idx) for idx in sel))
-        rows_sh = np.zeros((sh.n_shards, s_pad), np.int32)
-        blks_sh = np.zeros((sh.n_shards, s_pad), np.int32)
-        for s, idx in enumerate(sel):
-            rows_sh[s, : len(idx)] = row_ids[idx]
-            blks_sh[s, : len(idx)] = blk_ids[idx] - s * per
-        impl = {"gather": "fused"}.get(self.impl, self.impl)
-        ov, om = dmm_apply_sharded(
-            jnp.asarray(vals),
-            jnp.asarray(mask),
-            jnp.asarray(rows_sh),
-            jnp.asarray(blks_sh),
-            sh.src3d,
-            mesh=sh.mesh,
-            impl=impl,
-        )
-        self.stats["dispatches"] += 1
-        # all-gather: pull every shard's emitted dense rows to the host and
-        # scatter them back to the global output order
-        ov = np.asarray(ov)
-        om = np.asarray(om)
-        gv = np.zeros((row_ids.size, sh.width), ov.dtype)
-        gm = np.zeros((row_ids.size, sh.width), om.dtype)
-        for s, idx in enumerate(sel):
-            gv[idx] = ov[s, : len(idx)]
-            gm[idx] = om[s, : len(idx)]
-        return self._emit_rows(sh, gv, gm, blk_ids, out_events)
-
-    def _consume_blocks(
-        self, groups: Dict[Tuple[int, int], List[CDCEvent]]
-    ) -> List[CanonicalRow]:
-        """Legacy engine: one device dispatch per block per (o, v) group."""
-        rows: List[CanonicalRow] = []
-        reg = self.coordinator.registry
-        for (o, v), evs in groups.items():
-            sv = reg.domain.get(o, v)
-            uids = sv.uids
-            vals = np.zeros((len(evs), len(uids)), np.float32)
-            mask = np.zeros((len(evs), len(uids)), np.int8)
-            for b, ev in enumerate(evs):
-                payload = ev.message().payload
-                for k, uid in enumerate(uids):
-                    val = payload.get(uid)
-                    if val is not None:
-                        vals[b, k] = val
-                        mask[b, k] = 1
-            for block in self._compiled.column(o, v):
-                ov, om = dmm_apply(
-                    jnp.asarray(vals), jnp.asarray(mask), block.src, impl=self.impl
-                )
-                self.stats["dispatches"] += 1
-                ov, om = np.asarray(ov), np.asarray(om)
-                r, w = block.key[2], block.key[3]
-                for b, ev in enumerate(evs):
-                    if om[b].any():  # only non-empty outgoing messages
-                        rows.append(((r, w), ov[b, : block.n_out], om[b, : block.n_out], ev.key))
-                        self.stats["mapped"] += 1
-                    else:
-                        self.stats["empty"] += 1
-        return rows
+    @property
+    def _sharded(self) -> Optional[ShardedFusedDMM]:
+        plan = self.engine.plan
+        return plan if isinstance(plan, ShardedFusedDMM) else None
 
     # -- scalar oracle path (pure Algorithm 6; used in tests) -------------------
     def consume_scalar(self, events: Iterable[CDCEvent]) -> List[Message]:
-        if self._snapshot is None:
-            self.refresh()
+        # lazy refresh buffers (not drops) any replayed-parked-event rows
+        self.ensure_ready()
         out: List[Message] = []
         for ev in events:
             msg = ev.message().densify()

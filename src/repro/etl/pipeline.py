@@ -1,0 +1,394 @@
+"""Streaming Pipeline API: ``Source -> METLApp -> [RowSink, ...]``.
+
+The paper's METL app sits between CDC extraction and *multiple* consumers
+(DW + ML platform, SS3/SS5.5).  This module is that topology as a library:
+a :class:`Pipeline` pulls event chunks from a :class:`Source`, runs them
+through a :class:`~repro.etl.metl.METLApp`, and fans the canonical rows out
+to every attached :class:`RowSink`.
+
+**Backpressure** is pull-based: the pipeline requests the next chunk only
+when the previous one has been absorbed by every sink, and any sink
+reporting ``full()`` stops the pull entirely (the slowest bounded consumer
+gates the stream).  A stopped pipeline can be resumed -- ``run()`` again
+after draining the sink -- without losing events: the one lookahead chunk
+an async run may have triaged/densified is carried in ``self._pending`` and
+mapped first on resume.
+
+**Async consume** (``async_consume=True``) is the ROADMAP's double buffer,
+cashing in the engine protocol's explicit densify / dispatch / emit split:
+
+    dispatch chunk N            (device launch, never blocks: jax async
+                                 dispatch runs the compute on XLA's own
+                                 GIL-free thread pool)
+    triage+densify chunk N+1    (host python/numpy, overlapping N's device
+                                 execution -- including the sharded
+                                 engine's per-shard routing split)
+    emit chunk N                (the sync point; by now the device is
+                                 usually already done)
+    fan out chunk N's rows
+
+so chunk N+1's host-side densification overlaps chunk N's device execution.
+Triage stays strictly ordered (chunk N's dedup/parking completes before
+chunk N+1's begins), which keeps async consume bit-exact with sync consume
+-- same rows, same order, same stats; only the wall-clock changes.  At most
+two chunks are in flight (one on device, one densifying): that bound is the
+double buffer's built-in backpressure.
+
+The double buffer is deliberately single-threaded on the host: jax's async
+dispatch already provides the concurrency, and the A/B in
+benchmarks/bench_mapping.py showed that pushing densify onto a worker
+thread *loses* on a GIL runtime -- densify and the jit dispatch path are
+both GIL-bound python, so the threads convoy on the GIL (measured ~0.6-0.8x
+vs sync on CPU) instead of overlapping.  ``densify_thread=True`` opts the
+worker thread back in for runtimes where that tradeoff flips (free-threaded
+python, or accelerator backends where device time dwarfs host python).
+
+Sinks:
+
+  * :class:`TokenizerSink` -- feeds the serve batcher: rows -> token prompt
+    lists (:func:`repro.etl.batcher.tokenize_row`), optionally bounded
+    (``limit=``) so a serving frontend can stop the stream once it has
+    enough prompts;
+  * :class:`TableSink` -- the DW stand-in: appends rows to per-business-
+    entity tables, materialisable as numpy via :meth:`TableSink.to_arrays`;
+  * :class:`BatcherSink` -- wraps a :class:`~repro.etl.batcher.
+    CanonicalBatcher`; ``full()`` once a training batch is ready, which
+    makes ``pipeline.run()`` a "pull until the trainer has a batch" call;
+  * :class:`CollectSink` -- plain row accumulator (tests, benchmarks).
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import itertools
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .batcher import CanonicalBatcher, tokenize_row
+from .engines import CanonicalRow
+from .events import CDCEvent, EventSource
+from .metl import METLApp
+
+__all__ = [
+    "Source",
+    "EventChunkSource",
+    "ListSource",
+    "RowSink",
+    "TokenizerSink",
+    "TableSink",
+    "BatcherSink",
+    "CollectSink",
+    "Pipeline",
+    "PipelineStats",
+]
+
+
+# -- sources ------------------------------------------------------------------
+
+
+class Source:
+    """Anything that yields CDC event chunks on demand (pull-based)."""
+
+    def chunks(self) -> Iterator[List[CDCEvent]]:
+        raise NotImplementedError
+
+
+class EventChunkSource(Source):
+    """Chunked cursor over an :class:`~repro.etl.events.EventSource` stream.
+
+    The cursor persists across ``chunks()`` calls, so a pipeline stopped by
+    sink backpressure resumes exactly where it left off.  ``max_chunks``
+    bounds the *lifetime* pull count (None = unbounded stream).
+    """
+
+    def __init__(
+        self,
+        source: EventSource,
+        *,
+        start: int = 0,
+        chunk_size: int = 256,
+        max_chunks: Optional[int] = None,
+    ):
+        self.source = source
+        self.chunk_size = chunk_size
+        self.max_chunks = max_chunks
+        self._pos = start
+        self._pulled = 0
+
+    def chunks(self) -> Iterator[List[CDCEvent]]:
+        while self.max_chunks is None or self._pulled < self.max_chunks:
+            chunk = self.source.slice(self._pos, self.chunk_size)
+            self._pos += self.chunk_size
+            self._pulled += 1
+            yield chunk
+
+
+class ListSource(Source):
+    """A fixed, pre-materialised list of chunks (tests, benchmarks).
+
+    Like :class:`EventChunkSource`, the cursor persists across ``chunks()``
+    calls: a pipeline stopped by backpressure resumes at the next unpulled
+    chunk instead of re-delivering from the start."""
+
+    def __init__(self, chunks: Sequence[List[CDCEvent]]):
+        self._chunks = list(chunks)
+        self._cursor = 0
+
+    def chunks(self) -> Iterator[List[CDCEvent]]:
+        while self._cursor < len(self._chunks):
+            chunk = self._chunks[self._cursor]
+            self._cursor += 1
+            yield chunk
+
+
+# -- sinks --------------------------------------------------------------------
+
+
+class RowSink:
+    """Canonical-row consumer protocol.  ``full()`` is the backpressure
+    signal: a True return stops the pipeline's pull loop."""
+
+    def write(self, rows: List[CanonicalRow]) -> None:
+        raise NotImplementedError
+
+    def full(self) -> bool:
+        return False
+
+    def close(self) -> None:
+        pass
+
+
+class TokenizerSink(RowSink):
+    """Feeds the serve batcher: canonical rows -> token prompt lists."""
+
+    def __init__(self, vocab: int, *, max_len: int = 16, limit: Optional[int] = None):
+        self.vocab = vocab
+        self.max_len = max_len
+        self.limit = limit
+        self.prompts: List[List[int]] = []
+
+    def write(self, rows: List[CanonicalRow]) -> None:
+        for row in rows:
+            if self.full():
+                break
+            self.prompts.append(tokenize_row(row, self.vocab)[: self.max_len])
+
+    def full(self) -> bool:
+        return self.limit is not None and len(self.prompts) >= self.limit
+
+
+class TableSink(RowSink):
+    """Data-warehouse stand-in: one append-only table per business entity."""
+
+    def __init__(self):
+        self.tables: Dict[Tuple[int, int], List[Tuple[int, np.ndarray, np.ndarray]]] = {}
+
+    def write(self, rows: List[CanonicalRow]) -> None:
+        for (rw, vals, mask, key) in rows:
+            self.tables.setdefault(rw, []).append((key, vals, mask))
+
+    def to_arrays(self) -> Dict[Tuple[int, int], Dict[str, np.ndarray]]:
+        """Materialise every table: {(r, w): {keys (n,), values (n, n_out),
+        mask (n, n_out)}}."""
+        out = {}
+        for rw, recs in self.tables.items():
+            out[rw] = {
+                "keys": np.asarray([k for k, _, _ in recs], np.int64),
+                "values": np.stack([v for _, v, _ in recs]),
+                "mask": np.stack([m for _, _, m in recs]),
+            }
+        return out
+
+
+class BatcherSink(RowSink):
+    """Feeds a :class:`CanonicalBatcher`; full once a batch is ready, so
+    ``pipeline.run()`` pulls exactly until the trainer can step."""
+
+    def __init__(self, batcher: CanonicalBatcher):
+        self.batcher = batcher
+
+    def write(self, rows: List[CanonicalRow]) -> None:
+        self.batcher.add_rows(rows)
+
+    def full(self) -> bool:
+        return self.batcher.ready()
+
+
+class CollectSink(RowSink):
+    """Plain accumulator (tests / benchmarks)."""
+
+    def __init__(self, limit: Optional[int] = None):
+        self.rows: List[CanonicalRow] = []
+        self.limit = limit
+
+    def write(self, rows: List[CanonicalRow]) -> None:
+        self.rows.extend(rows)
+
+    def full(self) -> bool:
+        return self.limit is not None and len(self.rows) >= self.limit
+
+
+# -- the pipeline -------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    """Per-``run()`` accounting (the app's ``stats`` is cumulative)."""
+
+    chunks: int = 0
+    events: int = 0
+    rows: int = 0
+
+
+class Pipeline:
+    """``Source -> METLApp -> [RowSink, ...]`` with chunked pull and
+    optional double-buffered async consume (see module docstring)."""
+
+    def __init__(
+        self,
+        source: Source,
+        app: METLApp,
+        sinks: Sequence[RowSink],
+        *,
+        async_consume: bool = False,
+        densify_thread: bool = False,
+    ):
+        self.source = source
+        self.app = app
+        self.sinks = list(sinks)
+        self.async_consume = async_consume
+        self.densify_thread = densify_thread
+        self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
+        # lookahead chunk an async run triaged+densified but had to stop
+        # before dispatching (a sink went full); mapped first on resume so
+        # backpressure never loses events
+        self._pending: Optional[Tuple[List[CDCEvent], object]] = None
+
+    # -- plumbing -------------------------------------------------------------
+    def _fanout(self, rows: List[CanonicalRow]) -> None:
+        for sink in self.sinks:
+            sink.write(rows)
+
+    def _full(self) -> bool:
+        return any(sink.full() for sink in self.sinks)
+
+    def _prepare(self, chunk: List[CDCEvent]):
+        """Triage + densify one chunk (the host-side half of consume)."""
+        return self.app.engine.densify(self.app.triage(chunk))
+
+    # -- run ------------------------------------------------------------------
+    def run(self, *, max_chunks: Optional[int] = None) -> PipelineStats:
+        """Pull chunks until the source is exhausted, a sink reports full,
+        or ``max_chunks`` chunks have been mapped this call.  Returns this
+        run's counters; safe to call repeatedly (the source cursor and any
+        pending lookahead chunk persist across calls)."""
+        st = PipelineStats()
+        it = self.source.chunks()
+        if max_chunks is not None:
+            # a pending lookahead chunk counts against this run's budget
+            pulls = max_chunks - (1 if self._pending is not None else 0)
+            it = itertools.islice(it, max(0, pulls))
+        if self.async_consume:
+            self._run_async(it, st)
+        else:
+            self._run_sync(it, st)
+        return st
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+        for sink in self.sinks:
+            sink.close()
+
+    def _prepare_ahead(self, chunk):
+        """Triage + densify the lookahead chunk while the previous one is in
+        flight on device: inline by default (jax async dispatch supplies the
+        concurrency), on the persistent worker thread when opted in."""
+        if not self.densify_thread:
+            return self._prepare(chunk)
+        # do any lazy refresh (eviction -> recompile + parked replay) on the
+        # MAIN thread before handing triage to the worker: the replay runs
+        # dispatch/emit and would otherwise race the main thread's emit on
+        # the shared stats counter
+        self.app.ensure_ready()
+        if self._pool is None:
+            self._pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="metl-densify"
+            )
+        return self._pool.submit(self._prepare, chunk)
+
+    @staticmethod
+    def _resolve(dense):
+        return dense.result() if isinstance(dense, concurrent.futures.Future) else dense
+
+    def _account(self, st: PipelineStats, chunk, rows) -> None:
+        st.chunks += 1
+        st.events += len(chunk)
+        st.rows += len(rows)
+
+    def _emit_with_replay(self, rows: List[CanonicalRow]) -> List[CanonicalRow]:
+        """Prepend rows a lazy refresh replayed during triage (the staged
+        path bypasses consume(), so the pipeline must drain them itself --
+        replayed events are older, hence first)."""
+        replayed = self.app.take_replayed()
+        return replayed + rows if replayed else rows
+
+    def _run_sync(self, it: Iterator[List[CDCEvent]], st: PipelineStats) -> None:
+        engine = self.app.engine
+        if self._pending is not None:  # left over from a stopped async run
+            if self._full():  # still backpressured: keep it for later
+                return
+            chunk, dense = self._pending
+            self._pending = None
+            rows = engine.emit(engine.dispatch(dense)) if dense is not None else []
+            rows = self._emit_with_replay(rows)
+            self._account(st, chunk, rows)
+            self._fanout(rows)
+        for chunk in it:
+            if self._full():
+                break
+            rows = self.app.consume(chunk)
+            self._account(st, chunk, rows)
+            self._fanout(rows)
+
+    def _run_async(self, it: Iterator[List[CDCEvent]], st: PipelineStats) -> None:
+        """The double buffer: chunk N is dispatched (an async launch -- the
+        outputs are futures computing on XLA's thread pool), chunk N+1 is
+        triaged + densified while N executes, then emit(N) synchronises.
+        Triage order stays strictly sequential and the stages touch
+        disjoint state, so the result is bit-exact with the sync path."""
+        engine = self.app.engine
+        if self._full():
+            return
+        if self._pending is not None:
+            chunk, dense = self._pending
+            self._pending = None
+        else:
+            chunk = next(it, None)
+            if chunk is None:
+                return
+            dense = self._prepare(chunk)
+        handle = engine.dispatch(dense) if dense is not None else None
+        while chunk is not None:
+            nxt = next(it, None)
+            # the overlap: N+1's host-side densification runs while N's
+            # dispatch is still in flight on device
+            ahead = self._prepare_ahead(nxt) if nxt is not None else None
+            rows = engine.emit(handle) if handle is not None else []
+            dense_nxt = self._resolve(ahead) if ahead is not None else None
+            # drain AFTER the lookahead triage completed (worker joined):
+            # rows replayed by a lazy refresh during N+1's triage are
+            # delivered with chunk N, i.e. still ahead of N+1's own rows
+            rows = self._emit_with_replay(rows)
+            self._account(st, chunk, rows)
+            self._fanout(rows)
+            if self._full():
+                if nxt is not None:
+                    # keep the lookahead (already triaged) for resume
+                    self._pending = (nxt, dense_nxt)
+                return
+            chunk, dense = nxt, dense_nxt
+            handle = engine.dispatch(dense) if dense is not None else None

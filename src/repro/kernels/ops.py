@@ -4,6 +4,14 @@ Backend dispatch: Pallas-TPU kernels compile for the TPU target; on any
 other backend (this container is CPU) they execute in ``interpret=True``
 mode -- same kernel body, Python semantics -- or fall back to the pure-jnp
 oracle for speed.  ``impl`` lets benchmarks force a path.
+
+Dispatch handles, not results: every ``dmm_apply*`` returns its output
+arrays WITHOUT blocking on them -- under jax's async dispatch they are
+futures, and nothing in this module forces a host transfer or
+``block_until_ready``.  Callers choose their own sync point (the mapping
+engines' ``emit`` stage reads the arrays back with ``np.asarray``), which
+is what lets the streaming pipeline overlap chunk N+1's host-side
+densification with chunk N's device execution (double-buffered consume).
 """
 
 from __future__ import annotations
@@ -109,6 +117,10 @@ def dmm_apply_fused(
     The jit cache is keyed by operand shapes: (bucketed S, bucketed B,
     n_in_pad) per chunk plus the state's (n_blocks_pad, W) table shape, so
     steady-state consume traffic never retraces.
+
+    The returned ``(out_values, out_mask)`` are unblocked dispatch handles
+    (async-dispatch futures); the caller's first host read is the sync
+    point.
     """
     global dispatch_count
     dispatch_count += 1
@@ -174,8 +186,10 @@ def dmm_apply_sharded(
     (:class:`repro.core.dmm_jax.ShardedFusedDMM.src3d`), device-placed with
     its leading shard axis over the mesh ``data`` axis; ``rows``/``blks``
     are (n_shards, S_loc) per-shard routing tables in the same layout.
-    Returns the stacked (n_shards, S_loc, W) outputs; reading them back
-    (``np.asarray``) is the all-gather of emitted rows.
+    Returns the stacked (n_shards, S_loc, W) outputs as unblocked dispatch
+    handles; reading them back (``np.asarray``) is both the sync point and
+    the all-gather of emitted rows, so the sharded engine's emit stage can
+    overlap that all-gather with the next chunk's densification.
 
     One host dispatch per chunk, one kernel execution per shard per chunk:
     the per-shard dispatch count stays 1 exactly as in the replicated

@@ -5,10 +5,14 @@ server.
         --requests 8 --max-new 16
 
 With ``--etl`` the prompts are not random: a CDC stream flows through the
-METL app's *fused* mapping engine (one device dispatch per event chunk, see
-:mod:`repro.etl.metl`) and the resulting canonical rows are tokenized into
-the request prompts -- the paper's pipeline (CDC -> DMM -> CDM) fronting the
-model server.
+streaming METL pipeline (``EventChunkSource -> METLApp -> TokenizerSink``,
+:mod:`repro.etl.pipeline`) with the *fused* mapping engine (one device
+dispatch per event chunk, :mod:`repro.etl.engines`), and the bounded
+tokenizer sink backpressures the pull once serving has enough prompts --
+the paper's pipeline (CDC -> DMM -> CDM) fronting the model server.  Add
+``--async-consume`` for the double-buffered consume: chunk N+1's host-side
+densification overlaps chunk N's in-flight device dispatch (single-threaded
+on the host, riding jax async dispatch -- see repro.etl.pipeline).
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b --smoke --etl
 
@@ -29,45 +33,63 @@ import argparse
 import os
 
 
-def _etl_prompts(n_requests: int, vocab: int, max_len: int = 16, shards: int = 0):
-    """Stream CDC events through the fused METL path into token prompts."""
+def _etl_prompts(
+    n_requests: int,
+    vocab: int,
+    max_len: int = 16,
+    shards: int = 0,
+    async_consume: bool = False,
+):
+    """Stream CDC events through the METL pipeline into token prompts.
+
+    The pull topology is ``EventChunkSource -> METLApp -> TokenizerSink``:
+    the bounded sink (``limit=n_requests``) backpressures the stream, so the
+    pipeline pulls exactly as many chunks as serving needs."""
     from repro.core.state import StateCoordinator
     from repro.core.synthetic import ScenarioConfig, build_scenario
-    from repro.etl import EventSource, METLApp
-    from repro.etl.batcher import tokenize_row
+    from repro.etl import (
+        EventChunkSource,
+        EventSource,
+        METLApp,
+        Pipeline,
+        TokenizerSink,
+    )
 
     sc = build_scenario(ScenarioConfig(n_schemas=6, versions_per_schema=3, seed=7))
     coord = StateCoordinator(sc.registry, sc.dpm)
     if shards > 1:
         from repro.launch.mesh import make_etl_mesh
 
-        mesh = make_etl_mesh(shards)
-        app = METLApp(coord, engine="sharded", mesh=mesh)
-        t = app._sharded
+        app = METLApp(coord, engine="sharded", mesh=make_etl_mesh(shards))
+        info = app.engine.info()
         print(
-            f"etl: sharded engine over {shards} shards, "
-            f"{t.table_bytes_per_shard} table bytes/shard "
-            f"({t.n_blocks} blocks, {t.blocks_per_shard}/shard)"
+            f"etl: sharded engine over {info['n_shards']} shards, "
+            f"{info['table_bytes_per_shard']} table bytes/shard "
+            f"({info['n_blocks']} blocks, {info['blocks_per_shard']}/shard)"
         )
     else:
         app = METLApp(coord, engine="fused")
-    source = EventSource(sc.registry, seed=7)
-    rows, pos = [], 0
-    while len(rows) < n_requests:
-        got = app.consume(source.slice(pos, 256))
-        pos += 256
-        rows.extend(got)
-        if not got and pos >= 16 * 256:
+    sink = TokenizerSink(vocab, max_len=max_len, limit=n_requests)
+    source = EventChunkSource(EventSource(sc.registry, seed=7), chunk_size=256)
+    pipe = Pipeline(source, app, [sink], async_consume=async_consume)
+    # pull until serving has enough prompts; a whole 16-chunk window with
+    # zero canonical rows means the stream is unmappable -- bail out
+    total_rows = 0
+    while not sink.full():
+        st = pipe.run(max_chunks=16)
+        total_rows += st.rows
+        if st.rows == 0:
             raise RuntimeError(
-                f"ETL stream produced no canonical rows after {pos} events"
+                f"ETL stream produced no canonical rows in {st.events} "
+                f"events (total {app.stats['events']})"
             )
-    prompts = [tokenize_row(row, vocab)[:max_len] for row in rows[:n_requests]]
     print(
-        f"etl: {app.stats['events']} events -> {len(rows)} canonical rows "
+        f"etl: {app.stats['events']} events -> {total_rows} canonical rows "
         f"in {app.stats['dispatches']} device dispatches "
-        f"({app.stats['events'] / max(1, app.stats['dispatches']):.0f} events/dispatch)"
+        f"({app.stats['events'] / max(1, app.stats['dispatches']):.0f} events/dispatch"
+        f"{', async double-buffered' if async_consume else ''})"
     )
-    return prompts
+    return sink.prompts
 
 
 def main() -> None:
@@ -79,6 +101,9 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=0,
                     help="with --etl: shard the DMM block table over a 1xN "
                          "mesh data axis (engine='sharded'); 0/1 = replicated")
+    ap.add_argument("--async-consume", action="store_true",
+                    help="with --etl: double-buffered pipeline consume "
+                         "(chunk N+1 densifies while chunk N is on device)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=256)
@@ -105,7 +130,10 @@ def main() -> None:
     sc = ServeConfig(batch=args.batch, cache_len=args.cache_len, max_new=args.max_new)
     server = Server(params, cfg, sc)
     if args.etl:
-        prompts = _etl_prompts(args.requests, cfg.vocab, shards=args.shards)
+        prompts = _etl_prompts(
+            args.requests, cfg.vocab, shards=args.shards,
+            async_consume=args.async_consume,
+        )
     else:
         rng = np.random.default_rng(0)
         prompts = [
