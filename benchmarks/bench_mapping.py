@@ -14,10 +14,15 @@ per-shard table bytes ~ total/N.  The sharded rows run in a subprocess with
 a forced N-device CPU topology (jax pins the device count at first init).
 And (e) the **sync-vs-async pipeline A/B**: the streaming Pipeline over the
 same chunk stream with and without double-buffered consume (chunk N+1's
-host densification overlapped with chunk N's device dispatch).
+host densification overlapped with chunk N's device dispatch), plus the
+re-measured ``densify_thread=True`` variant now that densify is pure
+GIL-releasing numpy.  And (f) the **densify A/B**: the legacy per-item
+dict walk vs the columnar numpy scatter over the same triaged chunk.
 
 This benchmark is also a CI gate: it exits non-zero if the fused engine's
-dispatches-per-chunk regress above 1 (direct consume or async pipeline).
+dispatches-per-chunk regress above 1 (direct consume or async pipeline),
+if columnar densify is slower than the dict walk at the default chunk
+size, or if the two densify paths diverge bit-wise.
 
 Standalone smoke entry point (used by scripts/ci.sh):
 
@@ -186,21 +191,72 @@ def run(smoke: bool = False) -> list:
             f"fused engine regressed to {disp_fused} dispatches/chunk (want <= 1)"
         )
 
+    # -- densify A/B: legacy dict walk vs columnar numpy scatter --------------
+    # The tentpole gate: with the chunk columnarised once at the source
+    # boundary, the hot-thread densification must beat the per-item python
+    # dict walk at the bench's default chunk size -- and stay bit-exact.
+    from repro.etl import densify_chunk_dicts
+
+    app_den = METLApp(coord, engine="fused")
+    app_den.reset_dedup()
+    tri = app_den.triage(src.slice_columnar(30_000, n_events))
+    legacy_groups = tri.to_groups()
+    plan = app_den.engine.plan
+    den_iters = max(iters, 11)
+    us_dict = bench(lambda: densify_chunk_dicts(plan, legacy_groups),
+                    warmup=2, iters=den_iters)
+    us_col = bench(lambda: app_den.engine.densify(tri), warmup=2, iters=den_iters)
+    d_col, d_dict = app_den.engine.densify(tri), densify_chunk_dicts(plan, legacy_groups)
+    if d_col is None or d_dict is None:
+        # both paths must agree that the chunk is unmappable
+        bit_exact = d_col is None and d_dict is None
+    else:
+        bit_exact = (
+            np.array_equal(d_col.vals, d_dict.vals)
+            and np.array_equal(d_col.mask, d_dict.mask)
+            and np.array_equal(d_col.row_ids, d_dict.row_ids)
+            and np.array_equal(d_col.blk_ids, d_dict.blk_ids)
+            and np.array_equal(d_col.out_keys, d_dict.out_keys)
+        )
+    rows.append((
+        f"mapping/densify_dictwalk_{n_events}ev",
+        us_dict,
+        f"{n_events / (us_dict / 1e6):.0f} events/s (per-item python)",
+    ))
+    rows.append((
+        f"mapping/densify_columnar_{n_events}ev",
+        us_col,
+        f"{n_events / (us_col / 1e6):.0f} events/s, "
+        f"{us_dict / us_col:.1f}x vs dict walk, "
+        f"{tri.chunk.n_items} items, bit_exact={bit_exact}",
+    ))
+    if not bit_exact:
+        GATE_FAILURES.append("columnar densify diverged from the dict-walk oracle")
+    if us_col > us_dict:
+        GATE_FAILURES.append(
+            f"columnar densify slower than the dict walk at {n_events} events "
+            f"({us_col:.0f} us vs {us_dict:.0f} us)"
+        )
+
     # -- streaming pipeline: sync vs double-buffered async consume ------------
     # Same chunks, same app config; the A/B isolates the overlap of chunk
-    # N+1's host-side densification with chunk N's device dispatch.
+    # N+1's host-side densification with chunk N's device dispatch.  Chunks
+    # are columnar (the sources' default form since the densify tentpole).
     from repro.etl import CollectSink, ListSource, Pipeline
 
     n_chunks = 8 if smoke else 6
-    chunks = [src.slice(50_000 + k * n_events, n_events) for k in range(n_chunks)]
+    chunks = [src.slice_columnar(50_000 + k * n_events, n_events) for k in range(n_chunks)]
     total_ev = n_chunks * n_events
     app_pipe = METLApp(coord, engine="fused")
 
-    def pipe_run(async_consume):
+    def pipe_run(async_consume, densify_thread=False):
         app_pipe.reset_dedup()
         sink = CollectSink()
-        Pipeline(ListSource(chunks), app_pipe, [sink],
-                 async_consume=async_consume).run()
+        pipe = Pipeline(ListSource(chunks), app_pipe, [sink],
+                        async_consume=async_consume, densify_thread=densify_thread)
+        pipe.run()
+        if densify_thread:
+            pipe.close()
         return sink.rows
 
     # the pipeline pass is cheap (~tens of ms) but the A/B margin is ~10-30%,
@@ -208,6 +264,11 @@ def run(smoke: bool = False) -> list:
     pipe_iters = max(iters, 11)
     us_psync = bench(lambda: pipe_run(False), warmup=2, iters=pipe_iters)
     us_pasync = bench(lambda: pipe_run(True), warmup=2, iters=pipe_iters)
+    # the PR-3 caveat, re-measured on the columnar path: densify is now
+    # GIL-releasing numpy, so the opt-in worker thread should no longer
+    # convoy with the dispatch thread (was 0.6-0.8x on the dict walk)
+    us_pthread = bench(lambda: pipe_run(True, densify_thread=True),
+                       warmup=2, iters=pipe_iters)
     before = app_pipe.stats["dispatches"]
     pipe_run(True)
     disp_async = (app_pipe.stats["dispatches"] - before) / n_chunks
@@ -222,6 +283,12 @@ def run(smoke: bool = False) -> list:
         f"{total_ev / (us_pasync / 1e6):.0f} events/s, "
         f"{us_psync / us_pasync:.2f}x vs sync, "
         f"{disp_async:.0f} dispatch/chunk",
+    ))
+    rows.append((
+        f"mapping/pipeline_async_densify_thread_{n_chunks}x{n_events}ev",
+        us_pthread,
+        f"{total_ev / (us_pthread / 1e6):.0f} events/s, "
+        f"{us_psync / us_pthread:.2f}x vs sync (dict walk measured 0.6-0.8x)",
     ))
     if disp_async > 1:
         # an unmappable chunk legitimately issues 0 dispatches; only a

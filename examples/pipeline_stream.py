@@ -10,7 +10,9 @@ topology on the streaming Pipeline API:
 with double-buffered async consume: chunk N+1 is triaged + densified on the
 host while chunk N's fused dispatch executes on device (jax async
 dispatch), and the bounded tokenizer sink demonstrates backpressure -- once
-it has ``--prompts`` prompts the pipeline stops pulling.
+it has ``--prompts`` prompts the pipeline stops pulling.  The source yields
+columnar chunks (payloads flattened once into (uid, value) arrays at the
+source boundary), so the per-chunk densification is pure numpy.
 
     PYTHONPATH=src python examples/pipeline_stream.py
     PYTHONPATH=src python examples/pipeline_stream.py --chunks 32 --sync

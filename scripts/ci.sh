@@ -15,10 +15,12 @@
 #    consume) as an end-to-end smoke of the Pipeline API;
 # 4. a tiny-shape run of the mapping benchmark so the fused- and
 #    sharded-engine perf paths (kernel, shard_map dispatcher, consume,
-#    sync-vs-async pipeline) can't rot silently even when no test exercises
-#    the timing harness.  bench_mapping itself exits non-zero if the fused
-#    engine's dispatches-per-chunk regress above 1 (direct consume or async
-#    pipeline), failing this gate.
+#    sync-vs-async pipeline, columnar densify) can't rot silently even when
+#    no test exercises the timing harness.  bench_mapping itself exits
+#    non-zero -- failing this gate -- if the fused engine's dispatches-per-
+#    chunk regress above 1 (direct consume or async pipeline), if the
+#    columnar densify is SLOWER than the legacy dict walk at the bench's
+#    default chunk size, or if the two densify paths diverge bit-wise.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

@@ -79,6 +79,7 @@ __all__ = [
     "SUBLANE",
     "pad_to_lane",
     "bucket_rows",
+    "uid_lookup_table",
     "CompactedBlockMap",
     "compile_block",
     "compile_dpm",
@@ -94,6 +95,21 @@ __all__ = [
 
 LANE = 128  # TPU vector lane width; last-dim tiles must be multiples of this
 SUBLANE = 8  # second-minor tile width; sublane axes pad to multiples of this
+
+
+def uid_lookup_table(uids) -> np.ndarray:
+    """Dense uid -> position table for vectorised densification.
+
+    ``lut[uid] = k`` for the k-th uid in ``uids``, -1 elsewhere.  Registry
+    uids are small sequential ints, so the dense table stays tiny; lookups
+    become one bounds-checked numpy gather instead of a per-item dict.get.
+    """
+    uids = np.asarray(list(uids), dtype=np.int64)
+    if uids.size == 0:
+        return np.empty(0, dtype=np.int32)
+    lut = np.full(int(uids.max()) + 1, -1, dtype=np.int32)
+    lut[uids] = np.arange(uids.size, dtype=np.int32)
+    return lut
 
 
 def pad_to_lane(n: int, lane: int = LANE) -> int:
@@ -248,10 +264,13 @@ def compile_dpm(dpm: DPM, registry: Registry, lane: int = LANE) -> CompiledDMM:
 class FusedColumn:
     """Host-side routing for one incoming (schema o, version v) column.
 
-    ``uid_pos`` is the precomputed attribute-uid -> payload-slot lookup that
-    densification resolves payload items against before its numpy scatter;
-    ``block_ids`` are the global block-table rows of the column super-set
-    iDCPM_v^o, in compile (column) order.
+    ``uid_pos`` is the precomputed attribute-uid -> payload-slot lookup the
+    legacy dict-walk densification resolved payload items against; the
+    vectorised densification instead uses the PLAN-global ``uid_slot`` /
+    ``uid_col`` dense tables (uids are globally unique), with ``col_id``
+    naming this column in those tables.  ``block_ids`` are the global
+    block-table rows of the column super-set iDCPM_v^o, in compile (column)
+    order.
     """
 
     o: int
@@ -259,6 +278,7 @@ class FusedColumn:
     n_in: int
     uid_pos: Dict[int, int]
     block_ids: np.ndarray  # int32 (k,): rows of FusedDMM.src2d
+    col_id: int = -1  # position of this column in the plan's column order
 
 
 @dataclasses.dataclass
@@ -274,6 +294,8 @@ class FusedDMM:
     routes: List[Tuple[int, int]]  # block t -> business entity (r, w)
     n_out: np.ndarray  # int32 (n_blocks,): true output width per block
     columns: Dict[Tuple[int, int], FusedColumn]
+    uid_slot: np.ndarray  # int32 (max_uid+1,): uid -> payload slot, -1 = none
+    uid_col: np.ndarray  # int32 (max_uid+1,): uid -> owning col_id, -1 = none
 
     def column(self, o: int, v: int) -> Optional[FusedColumn]:
         return self.columns.get((o, v))
@@ -314,14 +336,39 @@ def _fused_tables(compiled: CompiledDMM, registry: Registry, lane: int = LANE):
             n_in=len(sv.uids),
             uid_pos=uid_pos,
             block_ids=np.asarray(ids, dtype=np.int32),
+            col_id=len(columns),
         )
+    # plan-global uid tables for the fully-vectorised densification: every
+    # attribute uid is globally unique (one registry counter), so one dense
+    # table resolves any payload uid to (its payload slot, its owning
+    # column) in a single gather; the owner check reproduces the legacy
+    # per-column lookup semantics for stray/foreign uids
+    max_uid = max(
+        (int(u) for col in columns.values() for u in col.uid_pos), default=-1
+    )
+    uid_slot = np.full(max_uid + 1, -1, dtype=np.int32)
+    uid_col = np.full(max_uid + 1, -1, dtype=np.int32)
+    for col in columns.values():
+        for u, k in col.uid_pos.items():
+            uid_slot[u] = k
+            uid_col[u] = col.col_id
     n_blocks = len(routes)
     n_blocks_pad = max(SUBLANE, -(-max(n_blocks, 1) // SUBLANE) * SUBLANE)
     table = np.full((n_blocks_pad, width), -1, dtype=np.int32)
     if src_rows:
         table[:n_blocks] = np.stack(src_rows)
     n_out_arr = np.asarray(n_out, dtype=np.int32)
-    return table, routes, n_out_arr, columns, pad_to_lane(n_in_max, lane), width, n_blocks
+    return (
+        table,
+        routes,
+        n_out_arr,
+        columns,
+        pad_to_lane(n_in_max, lane),
+        width,
+        n_blocks,
+        uid_slot,
+        uid_col,
+    )
 
 
 def compile_fused(
@@ -333,8 +380,8 @@ def compile_fused(
     the next state bump evicts it -- the fused analogue of the paper's
     Caffeine-cached hashmap of column super-sets.
     """
-    table, routes, n_out, columns, n_in_pad, width, n_blocks = _fused_tables(
-        compiled, registry, lane
+    table, routes, n_out, columns, n_in_pad, width, n_blocks, uid_slot, uid_col = (
+        _fused_tables(compiled, registry, lane)
     )
     return FusedDMM(
         state=compiled.state,
@@ -345,6 +392,8 @@ def compile_fused(
         routes=routes,
         n_out=n_out,
         columns=columns,
+        uid_slot=uid_slot,
+        uid_col=uid_col,
     )
 
 
@@ -375,6 +424,8 @@ class ShardedFusedDMM:
     routes: List[Tuple[int, int]]  # global block t -> business entity (r, w)
     n_out: np.ndarray  # int32 (n_blocks,) true output width per block
     columns: Dict[Tuple[int, int], FusedColumn]
+    uid_slot: np.ndarray  # int32 (max_uid+1,): uid -> payload slot, -1 = none
+    uid_col: np.ndarray  # int32 (max_uid+1,): uid -> owning col_id, -1 = none
 
     def column(self, o: int, v: int) -> Optional[FusedColumn]:
         return self.columns.get((o, v))
@@ -424,8 +475,8 @@ def compile_fused_sharded(
         if mesh is None:
             raise ValueError("need a mesh or an explicit n_shards")
         n_shards = mesh.shape[axis]
-    table, routes, n_out, columns, n_in_pad, width, n_blocks = _fused_tables(
-        compiled, registry, lane
+    table, routes, n_out, columns, n_in_pad, width, n_blocks, uid_slot, uid_col = (
+        _fused_tables(compiled, registry, lane)
     )
     per = -(-max(n_blocks, 1) // n_shards)
     per_pad = max(SUBLANE, -(-per // SUBLANE) * SUBLANE)
@@ -452,4 +503,6 @@ def compile_fused_sharded(
         routes=routes,
         n_out=n_out,
         columns=columns,
+        uid_slot=uid_slot,
+        uid_col=uid_col,
     )

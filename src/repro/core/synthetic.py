@@ -22,7 +22,7 @@ import numpy as np
 from .dmm import DPM, MappingMatrix, transform_to_dpm
 from .registry import Registry
 
-__all__ = ["ScenarioConfig", "Scenario", "build_scenario"]
+__all__ = ["ScenarioConfig", "Scenario", "build_scenario", "scenario_event_chunks"]
 
 
 @dataclasses.dataclass
@@ -105,3 +105,29 @@ def build_scenario(config: Optional[ScenarioConfig] = None) -> Scenario:
                     matrix.set(slot, a.uid, 1)
     matrix.validate_one_to_one()
     return Scenario(config=cfg, registry=reg, matrix=matrix, dpm=transform_to_dpm(matrix))
+
+
+def scenario_event_chunks(
+    scenario: Scenario,
+    *,
+    seed: int = 0,
+    start: int = 0,
+    chunk_size: int = 256,
+    n_chunks: int = 4,
+    columnar: bool = True,
+    **source_kwargs,
+) -> List:
+    """The scenario's deterministic CDC stream as ready-to-consume chunks.
+
+    With ``columnar=True`` (the default) each chunk is generated straight
+    into a :class:`~repro.etl.events.ColumnarChunk` -- payload (uid, value)
+    columns built once at the source boundary, never re-walked downstream --
+    which is the form benchmarks and the streaming pipeline consume.  Extra
+    kwargs (``p_null`` / ``p_duplicate`` / ...) pass through to the
+    :class:`~repro.etl.events.EventSource`.
+    """
+    from ..etl.events import EventSource  # local: core must not import etl at load
+
+    src = EventSource(scenario.registry, seed=seed, **source_kwargs)
+    slicer = src.slice_columnar if columnar else src.slice
+    return [slicer(start + k * chunk_size, chunk_size) for k in range(n_chunks)]

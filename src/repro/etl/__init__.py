@@ -1,9 +1,11 @@
-from .events import CDCEvent, EventSource  # noqa: F401
+from .events import CDCEvent, ColumnarChunk, EventSource, columnarize  # noqa: F401
 from .engines import (  # noqa: F401
     BlocksEngine,
     FusedEngine,
     MappingEngine,
     ShardedEngine,
+    TriagedChunk,
+    densify_chunk_dicts,
     make_engine,
     register_engine,
 )

@@ -13,6 +13,20 @@ through four explicit stages:
     emit(handle)                  the only sync point: read back, slice each
                                   surviving row to its block's true width
 
+Densification is **pure numpy over columnar chunks**: triage produces a
+:class:`TriagedChunk` -- a :class:`~repro.etl.events.ColumnarChunk` (flat
+``uids`` / ``vals`` item columns + CSR ``event_offsets``) plus per-(schema,
+version) event-index arrays -- and every engine scatters straight from the
+columns through the plan's precomputed global uid -> (slot, owning column)
+dense tables (``FusedDMM.uid_slot`` / ``uid_col``; the blocks engine builds
+per-column tables).  No per-item python runs on the hot thread, and
+the numpy scatter releases the GIL, which is what makes the pipeline's
+``densify_thread=True`` overlap a win instead of a convoy.  Legacy dict
+``Groups`` (``(o, v) -> [CDCEvent]``) are still accepted everywhere and are
+lifted through :func:`repro.etl.events.columnarize` on entry; the pre-
+columnar dict walk survives as :func:`densify_chunk_dicts`, the bit-
+exactness oracle and the benchmark's A/B baseline.
+
 The stage boundary is the seam the streaming pipeline
 (:mod:`repro.etl.pipeline`) exploits for double-buffered async consume:
 densify is pure host work (numpy), dispatch never blocks, so chunk N+1's
@@ -65,15 +79,19 @@ from ..core.dmm_jax import (
     compile_dpm,
     compile_fused,
     compile_fused_sharded,
+    uid_lookup_table,
 )
 from ..core.registry import Registry
 from ..core.state import SystemState
 from ..kernels.ops import dmm_apply, dmm_apply_fused, dmm_apply_sharded
-from .events import CDCEvent
+from .events import CDCEvent, ColumnarChunk, columnarize
 
 __all__ = [
     "CanonicalRow",
     "Groups",
+    "TriagedChunk",
+    "as_triaged",
+    "densify_chunk_dicts",
     "DenseChunk",
     "DispatchHandle",
     "MappingEngine",
@@ -90,7 +108,109 @@ CanonicalRow = Tuple[Tuple[int, int], np.ndarray, np.ndarray, int]
 # ((business entity r, version w), values (n_out,), mask (n_out,), event key)
 
 Groups = Dict[Tuple[int, int], List[CDCEvent]]
-# triaged chunk: (schema o, version v) -> mappable events, in arrival order
+# legacy triaged-chunk form: (schema o, version v) -> mappable events, in
+# arrival order; accepted by every densify and lifted via as_triaged()
+
+
+@dataclasses.dataclass
+class TriagedChunk:
+    """One triaged chunk in columnar form: the surviving events of a
+    :class:`~repro.etl.events.ColumnarChunk`, bucketed by (schema, version).
+
+    ``by_column`` maps each (o, v) to the indices (into ``chunk.events`` /
+    ``chunk.event_offsets``) of its mappable events, in arrival order and
+    first-appearance column order -- exactly the legacy ``Groups`` layout,
+    minus the per-event dicts.  Densification gathers each column's payload
+    items straight from the chunk's flat (uid, value) arrays.
+    """
+
+    chunk: ColumnarChunk
+    by_column: Dict[Tuple[int, int], np.ndarray]  # (o, v) -> event indices
+
+    def __bool__(self) -> bool:
+        return bool(self.by_column)
+
+    def to_groups(self) -> Groups:
+        """The legacy dict-of-event-lists view (oracle tests, A/B bench)."""
+        evs = self.chunk.events
+        return {
+            ov: [evs[int(i)] for i in idx] for ov, idx in self.by_column.items()
+        }
+
+
+def as_triaged(groups) -> Optional[TriagedChunk]:
+    """Coerce any accepted densify input to a non-empty :class:`TriagedChunk`.
+
+    ``TriagedChunk`` passes through; a legacy ``Groups`` dict is columnarised
+    once (events with non-numeric payload values are excluded -- on the
+    normal path triage already dead-lettered them).  Returns None when there
+    is nothing to map.
+    """
+    if groups is None:
+        return None
+    if isinstance(groups, TriagedChunk):
+        return groups if groups.by_column else None
+    if not groups:
+        return None
+    events = [ev for evs in groups.values() for ev in evs]
+    chunk = columnarize(events)
+    by_column: Dict[Tuple[int, int], np.ndarray] = {}
+    base = 0
+    for ov, evs in groups.items():
+        idx = [base + k for k in range(len(evs)) if not chunk.bad[base + k]]
+        if idx:
+            by_column[ov] = np.asarray(idx, dtype=np.int64)
+        base += len(evs)
+    if not by_column:
+        return None
+    return TriagedChunk(chunk=chunk, by_column=by_column)
+
+
+def _excl_cumsum(counts: np.ndarray) -> np.ndarray:
+    """Exclusive prefix sum: element i is sum(counts[:i])."""
+    out = np.zeros(counts.size, dtype=np.int64)
+    np.cumsum(counts[:-1], out=out[1:])
+    return out
+
+
+def _segmented_arange(starts: np.ndarray, counts: np.ndarray):
+    """Vectorised ``concatenate([arange(s, s + c) for s, c in ...])``.
+
+    Returns ``(values, seg_of)``: the concatenated ranges plus, per output
+    element, the index of the segment it came from.  One arange + two
+    repeats -- no per-segment python.
+    """
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    shift = starts - _excl_cumsum(counts)
+    values = np.arange(total, dtype=np.int64) + np.repeat(shift, counts)
+    seg_of = np.repeat(np.arange(counts.size, dtype=np.int64), counts)
+    return values, seg_of
+
+
+def _event_items(chunk: ColumnarChunk, idx: np.ndarray):
+    """Vectorised CSR gather: the payload items of the selected events.
+
+    Returns ``(ev_rows, item_idx)``: the flat positions (into ``chunk.uids``
+    / ``chunk.vals``) of every item owned by the events in ``idx``, plus the
+    event-local row (0..len(idx)-1) each item scatters into.
+    """
+    offs = chunk.event_offsets
+    starts = offs[idx]
+    counts = offs[idx + 1] - starts
+    item_idx, ev_rows = _segmented_arange(starts, counts)
+    return ev_rows, item_idx
+
+
+def _uid_slots(lut: np.ndarray, uids: np.ndarray) -> np.ndarray:
+    """Bounds-checked dense-table lookup: uid -> payload slot, -1 = foreign
+    uid (the vectorised twin of the legacy ``uid_pos.get(uid)``)."""
+    if lut.size == 0:
+        return np.full(uids.shape, -1, dtype=np.int32)
+    valid = (uids >= 0) & (uids < lut.size)
+    slots = lut[np.where(valid, uids, 0)]
+    return np.where(valid, slots, np.int32(-1))
 
 
 @dataclasses.dataclass
@@ -107,7 +227,7 @@ class DenseChunk:
     mask: np.ndarray  # (bucket(n_events), n_in_pad) i8
     row_ids: np.ndarray  # (S,) i32: event row per output row
     blk_ids: np.ndarray  # (S,) i32: global block per output row
-    out_events: List[CDCEvent]  # event per output row (emission order)
+    out_keys: np.ndarray  # (S,) i64: event key per output row (emission order)
     # sharded extras (per-shard routing split, filled by ShardedEngine)
     shard_sel: Optional[List[np.ndarray]] = None
     rows_sh: Optional[np.ndarray] = None  # (n_shards, S_loc) i32
@@ -128,17 +248,85 @@ class DispatchHandle:
     dense: Any
 
 
-def _densify_chunk(plan, groups: Groups) -> Optional[DenseChunk]:
+def _densify_chunk(plan, groups) -> Optional[DenseChunk]:
     """Chunk densification shared by the fused and sharded engines.
 
-    Collects (row, slot, value) triples with one Python pass over the
-    *present* payload items against the plan table's uid -> slot lookup,
-    lands them in one numpy scatter per (o, v) group, and builds the
-    (row, block) routing in legacy emission order (per column, per block,
-    per event).  Returns None for an unmappable chunk (zero dispatches).
+    Pure numpy over the columnar chunk, with NO per-column array work: the
+    selected events of every column are concatenated into one dense-row
+    order, their payload items gathered in one CSR pass
+    (:func:`_event_items`), uids resolved through the plan's GLOBAL
+    uid -> (slot, owning column) tables in one gather each (uids are
+    globally unique, so the owner comparison reproduces the legacy
+    per-column ``uid_pos.get`` semantics for stray uids), and the
+    (row, block) routing built by segmented aranges in legacy emission
+    order (per column, per block, per event).  Bit-exact with the dict walk
+    (:func:`densify_chunk_dicts`); returns None for an unmappable chunk
+    (zero dispatches).
     """
+    tri = as_triaged(groups)
+    if tri is None:
+        return None
+    chunk = tri.chunk
     # columns with no mapping paths contribute no output rows (exactly the
     # legacy behaviour: the per-block loop body never runs)
+    cols = [
+        (col, idx)
+        for (o, v), idx in tri.by_column.items()
+        if (col := plan.column(o, v)) is not None and col.block_ids.size
+    ]
+    if not cols:
+        return None
+
+    # dense-row order: every column's events, column by column
+    sel = np.concatenate([idx for _, idx in cols])
+    ev_counts = np.asarray([idx.size for _, idx in cols], dtype=np.int64)
+    n_events = sel.size
+
+    vals = np.zeros((bucket_rows(n_events), plan.n_in_pad), np.float32)
+    mask = np.zeros_like(vals, dtype=np.int8)
+    ev_rows, item_idx = _event_items(chunk, sel)
+    if item_idx.size:
+        uids = chunk.uids[item_idx]
+        slots = _uid_slots(plan.uid_slot, uids)
+        owner = _uid_slots(plan.uid_col, uids)
+        # column id per dense row -> per item; an item scatters only when
+        # its uid belongs to THIS event's column (legacy .get semantics)
+        col_ids = np.asarray([col.col_id for col, _ in cols], dtype=np.int32)
+        keep = owner == np.repeat(col_ids, ev_counts)[ev_rows]
+        if keep.any():
+            r, c = ev_rows[keep], slots[keep]
+            vals[r, c] = chunk.vals[item_idx[keep]]
+            mask[r, c] = 1
+
+    # routing in legacy emission order -- per column, per block, per event:
+    # block t of a column owning n events yields the segment
+    # arange(base, base + n); all segments realised in one segmented arange
+    blocks = np.concatenate([col.block_ids for col, _ in cols])
+    blocks_per_col = np.asarray(
+        [col.block_ids.size for col, _ in cols], dtype=np.int64
+    )
+    seg_starts = np.repeat(_excl_cumsum(ev_counts), blocks_per_col)
+    seg_counts = np.repeat(ev_counts, blocks_per_col)
+    row_ids, seg_of = _segmented_arange(seg_starts, seg_counts)
+
+    return DenseChunk(
+        plan=plan,
+        vals=vals,
+        mask=mask,
+        row_ids=row_ids.astype(np.int32),
+        blk_ids=blocks[seg_of],
+        out_keys=chunk.keys[sel][row_ids],
+    )
+
+
+def densify_chunk_dicts(plan, groups: Groups) -> Optional[DenseChunk]:
+    """The pre-columnar densification: one python pass over every payload
+    dict item per consume, resolved through the ``uid_pos`` dict.
+
+    Kept (not routed in production) as the bit-exactness oracle for the
+    property tests and the dict-walk side of the benchmark's densify A/B;
+    accepts only the legacy ``Groups`` form.
+    """
     cols = [
         (col, evs)
         for (o, v), evs in groups.items()
@@ -152,7 +340,7 @@ def _densify_chunk(plan, groups: Groups) -> Optional[DenseChunk]:
     mask = np.zeros_like(vals, dtype=np.int8)
     row_parts: List[np.ndarray] = []
     blk_parts: List[np.ndarray] = []
-    out_events: List[CDCEvent] = []
+    out_keys: List[int] = []
     base = 0
     for col, evs in cols:
         lookup = col.uid_pos
@@ -171,12 +359,11 @@ def _densify_chunk(plan, groups: Groups) -> Optional[DenseChunk]:
         if r_idx:
             vals[r_idx, c_idx] = v_buf
             mask[r_idx, c_idx] = 1
-        # output rows in legacy emission order: per block, then per event
         ev_rows = np.arange(base, base + len(evs), dtype=np.int32)
         for t in col.block_ids:
             row_parts.append(ev_rows)
             blk_parts.append(np.full(len(evs), t, np.int32))
-            out_events.extend(evs)
+            out_keys.extend(ev.key for ev in evs)
         base += len(evs)
 
     return DenseChunk(
@@ -185,11 +372,11 @@ def _densify_chunk(plan, groups: Groups) -> Optional[DenseChunk]:
         mask=mask,
         row_ids=np.concatenate(row_parts),
         blk_ids=np.concatenate(blk_parts),
-        out_events=out_events,
+        out_keys=np.asarray(out_keys, dtype=np.int64),
     )
 
 
-def _emit_rows(plan, ov, om, blk_ids, out_events, stats) -> List[CanonicalRow]:
+def _emit_rows(plan, ov, om, blk_ids, out_keys, stats) -> List[CanonicalRow]:
     """Row emission shared by the fused and sharded engines: one
     ``any``/``nonzero`` over the gathered output mask, then slice each
     surviving row to its block's true width."""
@@ -201,7 +388,7 @@ def _emit_rows(plan, ov, om, blk_ids, out_events, stats) -> List[CanonicalRow]:
     for i in emit:
         t = int(blk_ids[i])
         no = int(n_out[t])
-        rows.append((routes[t], ov[i, :no], om[i, :no], out_events[i].key))
+        rows.append((routes[t], ov[i, :no], om[i, :no], int(out_keys[i])))
     return rows
 
 
@@ -370,7 +557,7 @@ class FusedEngine(MappingEngine):
         s = dense.row_ids.size
         ov = np.asarray(handle.outputs[0])[:s]  # the sync point
         om = np.asarray(handle.outputs[1])[:s]
-        return _emit_rows(dense.plan, ov, om, dense.blk_ids, dense.out_events, self.stats)
+        return _emit_rows(dense.plan, ov, om, dense.blk_ids, dense.out_keys, self.stats)
 
     def info(self) -> Dict[str, Any]:
         d: Dict[str, Any] = {
@@ -463,7 +650,7 @@ class ShardedEngine(MappingEngine):
         for s, idx in enumerate(dense.shard_sel):
             gv[idx] = ov[s, : len(idx)]
             gm[idx] = om[s, : len(idx)]
-        return _emit_rows(sh, gv, gm, dense.blk_ids, dense.out_events, self.stats)
+        return _emit_rows(sh, gv, gm, dense.blk_ids, dense.out_keys, self.stats)
 
     def info(self) -> Dict[str, Any]:
         d: Dict[str, Any] = {
@@ -490,64 +677,81 @@ class ShardedEngine(MappingEngine):
 
 @dataclasses.dataclass
 class BlockDense:
-    """Per-column dense payloads for the legacy engine: one (vals, mask)
-    pair per (schema, version) group, mapped block-by-block in dispatch."""
+    """Per-column dense payloads for the legacy engine: one (keys, vals,
+    mask) triple per (schema, version) group, mapped block-by-block in
+    dispatch (``keys`` carries the event key per dense row)."""
 
     plan: CompiledDMM
-    groups: List[Tuple[Tuple[int, int], List[CDCEvent], np.ndarray, np.ndarray]]
+    groups: List[Tuple[Tuple[int, int], np.ndarray, np.ndarray, np.ndarray]]
 
 
 @register_engine("blocks")
 class BlocksEngine(MappingEngine):
     """Legacy engine: one device dispatch per block per (o, v) group.  Kept
-    for A/B benchmarking and as the only realisation of ``impl="onehot"``."""
+    for A/B benchmarking and as the only realisation of ``impl="onehot"``.
+    Densification is the same columnar numpy scatter as the fused engines
+    (shared :func:`_event_items` / :func:`_uid_slots`), just per column at
+    the column's true width instead of one fused payload tensor.
+    """
 
     def __init__(self, *, impl: str = "ref", stats=None):
         super().__init__(impl=impl, stats=stats)
         self._registry: Optional[Registry] = None
+        self._luts: Dict[Tuple[int, int], np.ndarray] = {}
 
     def _compile_plan(self, compiled: CompiledDMM, registry: Registry) -> CompiledDMM:
         self._registry = registry
+        self._luts = {}  # uid -> slot tables are per registry state
         return compiled  # the per-block plan IS the compiled DPM
 
-    def densify(self, groups: Groups) -> Optional[BlockDense]:
-        if not groups:
+    def _column_lut(self, o: int, v: int) -> np.ndarray:
+        lut = self._luts.get((o, v))
+        if lut is None:
+            lut = uid_lookup_table(self._registry.domain.get(o, v).uids)
+            self._luts[(o, v)] = lut
+        return lut
+
+    def densify(self, groups) -> Optional[BlockDense]:
+        tri = as_triaged(groups)
+        if tri is None:
             return None
-        reg = self._registry
+        chunk = tri.chunk
         out = []
-        for (o, v), evs in groups.items():
-            sv = reg.domain.get(o, v)
-            uids = sv.uids
-            vals = np.zeros((len(evs), len(uids)), np.float32)
-            mask = np.zeros((len(evs), len(uids)), np.int8)
-            for b, ev in enumerate(evs):
-                payload = ev.message().payload
-                for k, uid in enumerate(uids):
-                    val = payload.get(uid)
-                    if val is not None:
-                        vals[b, k] = val
-                        mask[b, k] = 1
-            out.append(((o, v), evs, vals, mask))
+        for (o, v), idx in tri.by_column.items():
+            idx = np.asarray(idx, dtype=np.int64)
+            n_in = len(self._registry.domain.get(o, v).uids)
+            vals = np.zeros((idx.size, n_in), np.float32)
+            mask = np.zeros((idx.size, n_in), np.int8)
+            ev_rows, item_idx = _event_items(chunk, idx)
+            if item_idx.size:
+                slots = _uid_slots(self._column_lut(o, v), chunk.uids[item_idx])
+                keep = slots >= 0
+                if keep.any():
+                    vals[ev_rows[keep], slots[keep]] = chunk.vals[item_idx[keep]]
+                    mask[ev_rows[keep], slots[keep]] = 1
+            out.append(((o, v), chunk.keys[idx], vals, mask))
         return BlockDense(plan=self.plan, groups=out)
 
     def dispatch(self, dense: BlockDense) -> DispatchHandle:
         outputs = []
-        for (o, v), evs, vals, mask in dense.groups:
+        for (o, v), keys, vals, mask in dense.groups:
             jv, jm = jnp.asarray(vals), jnp.asarray(mask)
             for block in dense.plan.column(o, v):
                 ov, om = dmm_apply(jv, jm, block.src, impl=self.impl)
                 self.stats["dispatches"] += 1
-                outputs.append((block, evs, ov, om))
+                outputs.append((block, keys, ov, om))
         return DispatchHandle(outputs=outputs, dense=dense)
 
     def emit(self, handle: DispatchHandle) -> List[CanonicalRow]:
         rows: List[CanonicalRow] = []
-        for block, evs, ov, om in handle.outputs:
+        for block, keys, ov, om in handle.outputs:
             ov, om = np.asarray(ov), np.asarray(om)  # the sync point
             r, w = block.key[2], block.key[3]
-            for b, ev in enumerate(evs):
+            for b in range(keys.size):
                 if om[b].any():  # only non-empty outgoing messages
-                    rows.append(((r, w), ov[b, : block.n_out], om[b, : block.n_out], ev.key))
+                    rows.append(
+                        ((r, w), ov[b, : block.n_out], om[b, : block.n_out], int(keys[b]))
+                    )
                     self.stats["mapped"] += 1
                 else:
                     self.stats["empty"] += 1

@@ -11,11 +11,33 @@ basis of straggler mitigation and elastic re-assignment in the trainer
     registry (the out-of-sync case of SS3.4), controlled by ``p_stale``;
   * CDC op types (create / update / delete) with before/after payloads;
   * "null" attributes (optional columns), controlled by ``p_null``.
+
+**Columnar chunks.**  The per-event payload dict is the wrong shape for the
+hot path: every consume used to re-walk each dict per (uid, value) item in
+python.  :class:`ColumnarChunk` flattens a whole chunk ONCE, at the source
+boundary, into CSR-style columnar arrays
+
+    uids          int32  (n_items,)   attribute uid per present payload item
+    vals          float32(n_items,)   the item's value
+    event_offsets int64  (n_events+1,) event e owns items [off[e], off[e+1])
+
+plus the per-event metadata triage needs (the :class:`CDCEvent` objects for
+parking / dead-lettering, and a ``keys`` array for routing).  Densification
+(:mod:`repro.etl.engines`) then becomes pure numpy -- a vectorised
+uid -> slot lookup and one scatter -- with no per-item python.
+:func:`columnarize` is the compatibility path that lifts legacy dict-payload
+event lists into the same representation, so ``METLApp.consume(list)`` keeps
+working; :meth:`EventSource.slice_columnar` builds chunks columnar from the
+start.  Non-numeric payload values (str / bool / Decimal / ...) cannot enter
+the float32 value column: :func:`columnarize` flags the carrying event in
+``bad`` and triage routes it to the dead-letter path with a counted stat
+instead of crashing (or silently truncating) inside the scatter.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import numbers
 from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
@@ -23,7 +45,7 @@ import numpy as np
 from ..core.registry import Registry
 from ..core.dmm import Message
 
-__all__ = ["CDCEvent", "EventSource"]
+__all__ = ["CDCEvent", "ColumnarChunk", "columnarize", "EventSource"]
 
 
 @dataclasses.dataclass
@@ -50,6 +72,87 @@ class CDCEvent:
             version=self.version,
             payload=dict(self.payload()),
         )
+
+
+def _is_numeric(val) -> bool:
+    """True for values that can enter the float32 value column bit-exactly
+    with the legacy dict walk: real numbers, excluding bool (a bool payload
+    is a schema error, not a 0.0/1.0 measurement -- see module docstring)."""
+    return isinstance(val, numbers.Real) and not isinstance(val, bool)
+
+
+@dataclasses.dataclass
+class ColumnarChunk:
+    """One event chunk flattened into columnar (uid, value) arrays.
+
+    Built once at the source boundary (:meth:`EventSource.slice_columnar`)
+    or lifted from a legacy event list (:func:`columnarize`); consumed by
+    the engines' pure-numpy densification.  ``events`` keeps the per-event
+    metadata triage needs (state / schema / version checks, and the objects
+    themselves for parking and dead-lettering); ``None`` payload values are
+    dropped at build time (they never scatter), and events carrying a
+    non-numeric value contribute NO items and are flagged in ``bad`` for
+    triage to dead-letter.
+    """
+
+    events: List[CDCEvent]  # per-event metadata, arrival order
+    uids: np.ndarray  # int32 (n_items,): attribute uid per present item
+    vals: np.ndarray  # float32 (n_items,): the item's value
+    event_offsets: np.ndarray  # int64 (n_events+1,): CSR offsets into uids/vals
+    keys: np.ndarray  # int64 (n_events,): dedup/emission key per event
+    bad: np.ndarray  # bool (n_events,): event carried a non-numeric value
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self):
+        # iterate the per-event metadata: a ColumnarChunk drops into any
+        # code that walked a legacy event-list chunk
+        return iter(self.events)
+
+    @property
+    def n_items(self) -> int:
+        return int(self.uids.size)
+
+
+def columnarize(events: List[CDCEvent]) -> ColumnarChunk:
+    """Flatten a legacy dict-payload event list into a :class:`ColumnarChunk`.
+
+    One python pass per payload item -- the SAME walk the legacy densify did
+    per consume, now done exactly once per chunk.  Present numeric items land
+    in the (uid, value) columns in dict iteration order; events with any
+    non-numeric value are flagged ``bad`` and contribute no items.
+    """
+    events = list(events)
+    uids: List[int] = []
+    vals: List[float] = []
+    offsets = np.zeros(len(events) + 1, dtype=np.int64)
+    keys = np.zeros(len(events), dtype=np.int64)
+    bad = np.zeros(len(events), dtype=bool)
+    for e, ev in enumerate(events):
+        keys[e] = ev.key
+        ev_uids: List[int] = []
+        ev_vals: List[float] = []
+        for uid, val in ev.payload().items():
+            if val is None:
+                continue
+            if not _is_numeric(val):
+                bad[e] = True
+                break
+            ev_uids.append(uid)
+            ev_vals.append(val)
+        if not bad[e]:
+            uids.extend(ev_uids)
+            vals.extend(ev_vals)
+        offsets[e + 1] = len(uids)
+    return ColumnarChunk(
+        events=events,
+        uids=np.asarray(uids, dtype=np.int32),
+        vals=np.asarray(vals, dtype=np.float32),
+        event_offsets=offsets,
+        keys=keys,
+        bad=bad,
+    )
 
 
 class EventSource:
@@ -119,6 +222,12 @@ class EventSource:
                 out.append(dataclasses.replace(ev, ts=pos))
             pos += 1
         return out[:count]
+
+    def slice_columnar(self, start: int, count: int) -> ColumnarChunk:
+        """Columnar form of :meth:`slice`: the same deterministic events,
+        with the payloads flattened once into (uid, value) arrays at the
+        source boundary so downstream densification never walks a dict."""
+        return columnarize(self.slice(start, count))
 
     def stream(self, start: int = 0, chunk: int = 256) -> Iterator[CDCEvent]:
         pos = start

@@ -45,14 +45,16 @@ attributes (CI grep-gates ``app._`` outside this package).
 from __future__ import annotations
 
 import collections
-from typing import Iterable, List, Optional, Union
+from typing import Dict, Iterable, List, Optional, Union
+
+import numpy as np
 
 from ..core.dmm import Message, map_message_dense
 from ..core.dmm_jax import CompiledDMM, FusedDMM, ShardedFusedDMM
 from ..core.registry import StaleStateError
 from ..core.state import StateCoordinator, SystemState
-from .engines import CanonicalRow, Groups, MappingEngine, make_engine
-from .events import CDCEvent
+from .engines import CanonicalRow, Groups, MappingEngine, TriagedChunk, make_engine
+from .events import CDCEvent, ColumnarChunk, columnarize
 
 __all__ = ["METLApp", "CanonicalRow"]
 
@@ -175,20 +177,44 @@ class METLApp:
         return False
 
     # -- triage + mapping --------------------------------------------------------
-    def triage(self, events: Iterable[CDCEvent], *, replay: bool = False) -> Groups:
+    def triage(
+        self,
+        events: Union[Iterable[CDCEvent], ColumnarChunk],
+        *,
+        replay: bool = False,
+    ) -> TriagedChunk:
         """Per-event dedup / state check / parking; returns the mappable
-        events bucketed by (schema, version) for the engine.
+        events bucketed by (schema, version) for the engine, in columnar
+        form (:class:`~repro.etl.engines.TriagedChunk`).
+
+        Accepts a :class:`~repro.etl.events.ColumnarChunk` (the streaming
+        sources' native form -- payloads already flattened once at the
+        source boundary) or any legacy event iterable, which is columnarised
+        here so ``consume(list_of_events)`` keeps working.  Events flagged
+        ``bad`` (non-numeric payload values that can neither scatter into
+        the float32 value column nor be silently truncated) are routed to
+        the dead-letter path and counted under ``stats["bad_payload"]`` --
+        identically for every engine, since all of them consume this triage.
 
         With ``replay=True`` (parked events re-entering after a refresh) the
         events are NOT re-counted under ``stats["events"]`` -- the caller
         accounts for them under ``stats["replayed"]``."""
         if not replay:
             self.ensure_ready()
-        groups: Groups = collections.defaultdict(list)
-        for ev in events:
+        chunk = events if isinstance(events, ColumnarChunk) else columnarize(events)
+        by_column: Dict = collections.defaultdict(list)
+        for e, ev in enumerate(chunk.events):
             if not replay:
                 self.stats["events"] += 1
             if self._is_duplicate(ev.key):
+                continue
+            if chunk.bad[e]:
+                # un-scatterable payload (str/bool/Decimal/...): semi-
+                # automated error path, same as an outdated event -- dead-
+                # letter for offset reset after the producer is fixed
+                self.dead_letter.append(ev)
+                self.stats["bad_payload"] += 1
+                self.stats["dead_lettered"] += 1
                 continue
             if ev.state != self._snapshot.i:
                 self.stats["stale"] += 1
@@ -205,15 +231,23 @@ class METLApp:
                     self.dead_letter.append(ev)
                     self.stats["dead_lettered"] += 1
                 continue
-            groups[(ev.schema_id, ev.version)].append(ev)
-        return groups
+            by_column[(ev.schema_id, ev.version)].append(e)
+        return TriagedChunk(
+            chunk=chunk,
+            by_column={
+                ov: np.asarray(idx, dtype=np.int64) for ov, idx in by_column.items()
+            },
+        )
 
-    def consume(self, events: Iterable[CDCEvent]) -> List[CanonicalRow]:
-        """Map a chunk of events to canonical rows.
+    def consume(
+        self, events: Union[Iterable[CDCEvent], ColumnarChunk]
+    ) -> List[CanonicalRow]:
+        """Map a chunk of events (legacy list or columnar) to canonical rows.
 
         Triage (dedup / state check / parking) is per event; the mapping is
         chunk-batched through the engine's densify -> dispatch -> emit
-        stages.  The fused engine issues a constant number of device
+        stages, with densification running as pure numpy over the chunk's
+        columnar (uid, value) arrays.  The fused engine issues a constant number of device
         dispatches per chunk (one, when any mappable event is present); the
         legacy per-block engine issues one per (column, block) pair.
 

@@ -6,6 +6,21 @@ a :class:`Pipeline` pulls event chunks from a :class:`Source`, runs them
 through a :class:`~repro.etl.metl.METLApp`, and fans the canonical rows out
 to every attached :class:`RowSink`.
 
+**Columnar source contract.**  A chunk is either a legacy
+``List[CDCEvent]`` or a :class:`~repro.etl.events.ColumnarChunk` -- the
+payloads flattened ONCE at the source boundary into flat (uid, value)
+arrays plus CSR event offsets.  :class:`EventChunkSource` yields columnar
+chunks by default (``columnar=False`` opts back into event lists); either
+form feeds ``METLApp.triage`` unchanged, and densification downstream is
+pure numpy (no per-item python on the hot thread, GIL released inside the
+scatter).  Sources also honour the dead-letter replay contract:
+``source.reset_offset(pos)`` repositions the cursor so the stream
+re-delivers deterministically from the position ``METLApp.reset_offset()``
+returned -- re-slicing an :class:`EventChunkSource` regenerates the events
+at the *current* registry state (the paper's "set back Kafka-offsets and
+start new initial loads"), and a finished :class:`ListSource` cursor
+rewinds to the chunk holding that position.
+
 **Backpressure** is pull-based: the pipeline requests the next chunk only
 when the previous one has been absorbed by every sink, and any sink
 reporting ``full()`` stops the pull entirely (the slowest bounded consumer
@@ -62,14 +77,16 @@ from __future__ import annotations
 import concurrent.futures
 import dataclasses
 import itertools
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from .batcher import CanonicalBatcher, tokenize_row
 from .engines import CanonicalRow
-from .events import CDCEvent, EventSource
+from .events import CDCEvent, ColumnarChunk, EventSource
 from .metl import METLApp
+
+Chunk = Union[List[CDCEvent], ColumnarChunk]
 
 __all__ = [
     "Source",
@@ -89,9 +106,21 @@ __all__ = [
 
 
 class Source:
-    """Anything that yields CDC event chunks on demand (pull-based)."""
+    """Anything that yields CDC event chunks on demand (pull-based).
 
-    def chunks(self) -> Iterator[List[CDCEvent]]:
+    A chunk is a ``List[CDCEvent]`` or a :class:`ColumnarChunk` (see module
+    docstring).  ``reset_offset(pos)`` is the dead-letter replay contract:
+    reposition the cursor so the next ``chunks()`` call re-delivers the
+    stream deterministically from stream position ``pos`` (the value
+    ``METLApp.reset_offset()`` returned) -- it must work on an exhausted
+    cursor too, because the dead letter is typically drained after the
+    stream stopped.
+    """
+
+    def chunks(self) -> Iterator[Chunk]:
+        raise NotImplementedError
+
+    def reset_offset(self, pos: int) -> None:
         raise NotImplementedError
 
 
@@ -100,7 +129,11 @@ class EventChunkSource(Source):
 
     The cursor persists across ``chunks()`` calls, so a pipeline stopped by
     sink backpressure resumes exactly where it left off.  ``max_chunks``
-    bounds the *lifetime* pull count (None = unbounded stream).
+    bounds the *lifetime* pull count (None = unbounded stream); a
+    :meth:`reset_offset` rewind re-aims the position-derived budget rather
+    than burning extra pulls.  With ``columnar=True`` (the default) chunks
+    are built columnar at the source boundary
+    (:meth:`~repro.etl.events.EventSource.slice_columnar`).
     """
 
     def __init__(
@@ -110,19 +143,34 @@ class EventChunkSource(Source):
         start: int = 0,
         chunk_size: int = 256,
         max_chunks: Optional[int] = None,
+        columnar: bool = True,
     ):
         self.source = source
         self.chunk_size = chunk_size
         self.max_chunks = max_chunks
+        self.columnar = columnar
+        self._start = start
         self._pos = start
         self._pulled = 0
 
-    def chunks(self) -> Iterator[List[CDCEvent]]:
+    def chunks(self) -> Iterator[Chunk]:
+        slicer = self.source.slice_columnar if self.columnar else self.source.slice
         while self.max_chunks is None or self._pulled < self.max_chunks:
-            chunk = self.source.slice(self._pos, self.chunk_size)
+            chunk = slicer(self._pos, self.chunk_size)
             self._pos += self.chunk_size
             self._pulled += 1
             yield chunk
+
+    def reset_offset(self, pos: int) -> None:
+        """Rewind to the chunk-grid slice containing stream position ``pos``.
+
+        Aligning down to the grid keeps re-slicing deterministic: the
+        re-delivered chunks have exactly the boundaries the original pull
+        had, so every host (and every replay) regenerates identical slices.
+        """
+        n = max(0, pos - self._start) // self.chunk_size
+        self._pos = self._start + n * self.chunk_size
+        self._pulled = min(self._pulled, int(n))
 
 
 class ListSource(Source):
@@ -130,17 +178,34 @@ class ListSource(Source):
 
     Like :class:`EventChunkSource`, the cursor persists across ``chunks()``
     calls: a pipeline stopped by backpressure resumes at the next unpulled
-    chunk instead of re-delivering from the start."""
+    chunk instead of re-delivering from the start.  :meth:`reset_offset`
+    rewinds a (possibly finished) cursor to the first chunk holding the
+    requested stream position, so dead-letter replay re-delivers the same
+    chunk objects deterministically."""
 
-    def __init__(self, chunks: Sequence[List[CDCEvent]]):
+    def __init__(self, chunks: Sequence[Chunk]):
         self._chunks = list(chunks)
         self._cursor = 0
 
-    def chunks(self) -> Iterator[List[CDCEvent]]:
+    def chunks(self) -> Iterator[Chunk]:
         while self._cursor < len(self._chunks):
             chunk = self._chunks[self._cursor]
             self._cursor += 1
             yield chunk
+
+    @staticmethod
+    def _events(chunk: Chunk) -> List[CDCEvent]:
+        return chunk.events if isinstance(chunk, ColumnarChunk) else chunk
+
+    def reset_offset(self, pos: int) -> None:
+        """Rewind (even a finished cursor) to the first chunk containing an
+        event at stream position >= ``pos``; no-op past the end when every
+        chunk is older than ``pos``."""
+        for k, chunk in enumerate(self._chunks):
+            if any(ev.ts >= pos for ev in self._events(chunk)):
+                self._cursor = k
+                return
+        self._cursor = len(self._chunks)
 
 
 # -- sinks --------------------------------------------------------------------
@@ -264,7 +329,7 @@ class Pipeline:
         # lookahead chunk an async run triaged+densified but had to stop
         # before dispatching (a sink went full); mapped first on resume so
         # backpressure never loses events
-        self._pending: Optional[Tuple[List[CDCEvent], object]] = None
+        self._pending: Optional[Tuple[Chunk, object]] = None
 
     # -- plumbing -------------------------------------------------------------
     def _fanout(self, rows: List[CanonicalRow]) -> None:
@@ -287,8 +352,12 @@ class Pipeline:
         st = PipelineStats()
         it = self.source.chunks()
         if max_chunks is not None:
-            # a pending lookahead chunk counts against this run's budget
-            pulls = max_chunks - (1 if self._pending is not None else 0)
+            # a pending lookahead chunk counts against this run's budget --
+            # but only when this run can actually map it: a still-
+            # backpressured resume keeps the pending parked and maps
+            # nothing, and charging it anyway would under-pull the budget
+            pending_maps = self._pending is not None and not self._full()
+            pulls = max_chunks - (1 if pending_maps else 0)
             it = itertools.islice(it, max(0, pulls))
         if self.async_consume:
             self._run_async(it, st)
@@ -336,7 +405,7 @@ class Pipeline:
         replayed = self.app.take_replayed()
         return replayed + rows if replayed else rows
 
-    def _run_sync(self, it: Iterator[List[CDCEvent]], st: PipelineStats) -> None:
+    def _run_sync(self, it: Iterator[Chunk], st: PipelineStats) -> None:
         engine = self.app.engine
         if self._pending is not None:  # left over from a stopped async run
             if self._full():  # still backpressured: keep it for later
@@ -347,14 +416,20 @@ class Pipeline:
             rows = self._emit_with_replay(rows)
             self._account(st, chunk, rows)
             self._fanout(rows)
-        for chunk in it:
+        while True:
+            # check BEFORE pulling: pulling first and then breaking on a
+            # full sink advanced the source cursor past a chunk that was
+            # never mapped -- silently skipped events on the next run
             if self._full():
+                break
+            chunk = next(it, None)
+            if chunk is None:
                 break
             rows = self.app.consume(chunk)
             self._account(st, chunk, rows)
             self._fanout(rows)
 
-    def _run_async(self, it: Iterator[List[CDCEvent]], st: PipelineStats) -> None:
+    def _run_async(self, it: Iterator[Chunk], st: PipelineStats) -> None:
         """The double buffer: chunk N is dispatched (an async launch -- the
         outputs are futures computing on XLA's thread pool), chunk N+1 is
         triaged + densified while N executes, then emit(N) synchronises.

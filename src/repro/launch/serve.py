@@ -9,10 +9,13 @@ streaming METL pipeline (``EventChunkSource -> METLApp -> TokenizerSink``,
 :mod:`repro.etl.pipeline`) with the *fused* mapping engine (one device
 dispatch per event chunk, :mod:`repro.etl.engines`), and the bounded
 tokenizer sink backpressures the pull once serving has enough prompts --
-the paper's pipeline (CDC -> DMM -> CDM) fronting the model server.  Add
-``--async-consume`` for the double-buffered consume: chunk N+1's host-side
-densification overlaps chunk N's in-flight device dispatch (single-threaded
-on the host, riding jax async dispatch -- see repro.etl.pipeline).
+the paper's pipeline (CDC -> DMM -> CDM) fronting the model server.  The
+source yields **columnar chunks** (payload (uid, value) arrays built once
+at the source boundary), so the hot consume thread densifies in pure numpy
+instead of walking payload dicts.  Add ``--async-consume`` for the
+double-buffered consume: chunk N+1's host-side densification overlaps
+chunk N's in-flight device dispatch (single-threaded on the host, riding
+jax async dispatch -- see repro.etl.pipeline).
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b --smoke --etl
 
@@ -70,7 +73,11 @@ def _etl_prompts(
     else:
         app = METLApp(coord, engine="fused")
     sink = TokenizerSink(vocab, max_len=max_len, limit=n_requests)
-    source = EventChunkSource(EventSource(sc.registry, seed=7), chunk_size=256)
+    # columnar=True (the default): payloads flatten to (uid, value) arrays
+    # once at the source boundary; consume densifies in pure numpy
+    source = EventChunkSource(
+        EventSource(sc.registry, seed=7), chunk_size=256, columnar=True
+    )
     pipe = Pipeline(source, app, [sink], async_consume=async_consume)
     # pull until serving has enough prompts; a whole 16-chunk window with
     # zero canonical rows means the stream is unmappable -- bail out
