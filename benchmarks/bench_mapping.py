@@ -18,11 +18,18 @@ host densification overlapped with chunk N's device dispatch), plus the
 re-measured ``densify_thread=True`` variant now that densify is pure
 GIL-releasing numpy.  And (f) the **densify A/B**: the legacy per-item
 dict walk vs the columnar numpy scatter over the same triaged chunk.
+And (g) the **epoch-transition A/B**: events/s across a LIVE schema
+evolution -- the same stream mapped with the evolution applied out-of-band
+(manual ``apply_update`` + refresh) vs in-band (a ``SchemaEvolved`` control
+event riding the stream), plus a 4-instance ``Cluster`` over sliced
+sources running the identical transition.
 
 This benchmark is also a CI gate: it exits non-zero if the fused engine's
-dispatches-per-chunk regress above 1 (direct consume or async pipeline),
-if columnar densify is slower than the dict walk at the default chunk
-size, or if the two densify paths diverge bit-wise.
+dispatches-per-chunk regress above 1 (direct consume, async pipeline, or
+any cluster instance across the epoch transition), if columnar densify is
+slower than the dict walk at the default chunk size, if the two densify
+paths diverge bit-wise, or if the epoch transition drops/duplicates rows
+(in-band vs out-of-band oracle, cluster vs single instance).
 
 Standalone smoke entry point (used by scripts/ci.sh):
 
@@ -34,6 +41,7 @@ from __future__ import annotations
 import os
 import subprocess
 import sys
+import time
 
 import numpy as np
 import jax
@@ -296,6 +304,117 @@ def run(smoke: bool = False) -> list:
         GATE_FAILURES.append(
             f"async pipeline consume issued {disp_async} dispatches/chunk (want <= 1)"
         )
+
+    # -- epoch transition A/B: events/s across a LIVE schema evolution --------
+    # An in-band SchemaEvolved lands mid-stream (control plane): evict, lazy
+    # recompile at the new state, jit retrace -- all inside the timed run.
+    # Gates: the in-band run must emit EXACTLY the out-of-band oracle's rows
+    # (zero dropped/duplicated rows across the transition), and fused
+    # dispatches/chunk must stay at 1 per instance, including on a
+    # 4-instance Cluster over sliced sources.
+    from repro.etl import Cluster, CollectSink, EventChunkSource, Pipeline
+    from repro.etl.control import SchemaEvolved
+
+    n_epoch_chunks = 8
+    mid = n_epoch_chunks // 2
+
+    def _epoch_world():
+        sc_e = build_scenario(cfg)
+        coord_e = StateCoordinator(sc_e.registry, sc_e.dpm)
+        reg_e = sc_e.registry
+        o_e = reg_e.domain.schema_ids()[0]
+        v_e = reg_e.domain.latest_version(o_e)
+        keep = tuple(a.name for a in reg_e.domain.get(o_e, v_e).attributes)[1:]
+        ev = SchemaEvolved(tree="domain", schema_id=o_e, keep=keep, add=("bench_evo",))
+        return sc_e, coord_e, (o_e, v_e, keep), ev
+
+    def _keys(rows_):
+        return [r[3] for r in rows_]
+
+    # out-of-band oracle: same grid, manual apply_update + refresh at mid
+    sc_o, coord_o, (o_o, v_o, keep_o), _ = _epoch_world()
+    app_o = METLApp(coord_o, engine="fused")
+    src_o = EventSource(sc_o.registry, seed=3)
+    t0 = time.perf_counter()
+    rows_oob = []
+    for k in range(n_epoch_chunks):
+        if k == mid:
+            def _mutate(r):
+                r.evolve(r.domain, o_o, keep=list(keep_o), add=["bench_evo"])
+                return ("added_domain", o_o, v_o + 1)
+            coord_o.apply_update(_mutate)
+            app_o.refresh()
+        rows_oob.extend(app_o.consume(src_o.slice_columnar(k * n_events, n_events)))
+    us_oob = (time.perf_counter() - t0) * 1e6
+    total_epoch_ev = n_epoch_chunks * n_events
+
+    # in-band: the same evolution as a control event ON the stream
+    sc_i, coord_i, _, ev_i = _epoch_world()
+    app_i = METLApp(coord_i, engine="fused")
+    sink_i = CollectSink()
+    pipe_i = Pipeline(
+        EventChunkSource(EventSource(sc_i.registry, seed=3), chunk_size=n_events,
+                         max_chunks=n_epoch_chunks, control={mid: ev_i}),
+        app_i, [sink_i],
+    )
+    t0 = time.perf_counter()
+    pipe_i.run()
+    us_inband = (time.perf_counter() - t0) * 1e6
+    rows.append((
+        f"mapping/epoch_transition_oob_{n_epoch_chunks}x{n_events}ev",
+        us_oob,
+        f"{total_epoch_ev / (us_oob / 1e6):.0f} events/s across an out-of-band evolution",
+    ))
+    rows.append((
+        f"mapping/epoch_transition_inband_{n_epoch_chunks}x{n_events}ev",
+        us_inband,
+        f"{total_epoch_ev / (us_inband / 1e6):.0f} events/s across an in-band "
+        f"evolution, {us_oob / us_inband:.2f}x vs out-of-band, "
+        f"{app_i.stats['dispatches']} dispatches/{n_epoch_chunks} chunks",
+    ))
+    if _keys(sink_i.rows) != _keys(rows_oob):
+        GATE_FAILURES.append(
+            f"epoch transition dropped/duplicated rows: in-band emitted "
+            f"{len(sink_i.rows)} rows vs oracle {len(rows_oob)}"
+        )
+    if app_i.stats["dispatches"] > n_epoch_chunks:
+        GATE_FAILURES.append(
+            f"in-band epoch transition issued {app_i.stats['dispatches']} "
+            f"dispatches over {n_epoch_chunks} chunks (want <= 1/chunk)"
+        )
+
+    # 4-instance cluster over sliced sources, same stream + evolution
+    sc_c, coord_c, _, ev_c = _epoch_world()
+    sink_c = CollectSink()
+    cluster = Cluster.over_stream(
+        coord_c, EventSource(sc_c.registry, seed=3), instances=4,
+        chunk_size=n_events, max_chunks=n_epoch_chunks, control={mid: ev_c},
+        sinks=[sink_c],
+    )
+    t0 = time.perf_counter()
+    cluster.run()
+    us_cluster = (time.perf_counter() - t0) * 1e6
+    cinfo = cluster.info()
+    rows.append((
+        f"mapping/epoch_transition_cluster4_{n_epoch_chunks}x{n_events}ev",
+        us_cluster,
+        f"{total_epoch_ev / (us_cluster / 1e6):.0f} events/s across the same "
+        f"evolution on 4 instances, {cinfo['dispatches']} total dispatches, "
+        f"per-instance states {cinfo['states']}",
+    ))
+    if _keys(sink_c.rows) != _keys(rows_oob):
+        GATE_FAILURES.append(
+            f"4-instance cluster diverged across the epoch transition: "
+            f"{len(sink_c.rows)} rows vs single-instance {len(rows_oob)}"
+        )
+    for k, app_k in enumerate(cluster.apps):
+        # instance k owns chunks k, k+4, ... below n_epoch_chunks
+        own = len(range(k, n_epoch_chunks, 4))
+        if app_k.stats["dispatches"] > own:
+            GATE_FAILURES.append(
+                f"cluster instance {k} issued {app_k.stats['dispatches']} "
+                f"dispatches over {own} chunks (want <= 1/chunk/instance)"
+            )
 
     # -- replicated vs sharded A/B (subprocess per shard count) ---------------
     for shards in ((2,) if smoke else (2, 4, 8)):

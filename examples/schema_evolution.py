@@ -1,68 +1,154 @@
-"""Live schema evolution during a training run.
+"""Live schema evolution ON the stream, through the typed control plane.
 
 The paper's operational core: extraction schemas change several times a day;
 every change triggers the automated Algorithm-5 update, cache eviction, and
-a state bump that all horizontally-scaled consumers observe.  This example
-trains on the METL stream while versions are added mid-run, and shows the
-pipeline never emits a stale-state mapping.
+a state bump that all horizontally-scaled consumers observe.  Since the
+control-plane redesign the whole workflow is IN-BAND: typed
+:class:`~repro.etl.control.ControlEvent`\\ s ride the same stream as the CDC
+data (``EventChunkSource(control={chunk: event})``), the coordinator is the
+single state writer appending every applied event to its replayable
+``control_log``, and the pipeline applies each event at the chunk boundary
+where it arrives -- evict, lazy recompile, parked replay, all mid-stream.
+
+This example trains on the METL stream while the stream itself carries
+
+  * a ``SchemaEvolved`` (version v -> v+1 with equivalence links),
+  * a ``Freeze``/``Thaw`` initial-load window with a second evolution
+    arriving INSIDE the window (deferred, re-admitted by the thaw,
+    exactly the SS3.4 rule), and
+  * a ``VersionDeleted`` retirement,
+
+then proves the single-writer story: replaying ``coordinator.control_log``
+over a fresh seed registry reproduces the final state ``i`` and the DPM
+bit-exactly.  ``--instances N`` runs the same scripted stream over a
+multi-instance :class:`~repro.etl.cluster.Cluster` instead of one pipeline.
 
     PYTHONPATH=src python examples/schema_evolution.py
+    PYTHONPATH=src python examples/schema_evolution.py --steps 4 --instances 4
 """
 
-import jax.numpy as jnp
+import argparse
 
-import repro.configs as C
 from repro.core.state import StateCoordinator
 from repro.core.synthetic import ScenarioConfig, build_scenario
-from repro.etl import CanonicalBatcher, EventSource, METLApp
-from repro.train.loop import TrainConfig, train
-from repro.train.optimizer import AdamWConfig
+from repro.etl import (
+    BatcherSink,
+    CanonicalBatcher,
+    Cluster,
+    EventChunkSource,
+    EventSource,
+    Freeze,
+    METLApp,
+    Pipeline,
+    SchemaEvolved,
+    Thaw,
+    VersionDeleted,
+    replay_control_log,
+)
+
+
+def scripted_control(registry):
+    """The day's schema-registry workflow, scheduled on the chunk grid."""
+    schemas = registry.domain.schema_ids()
+
+    def evolve(o, tag):
+        v = registry.domain.latest_version(o)
+        keep = tuple(a.name for a in registry.domain.get(o, v).attributes)[1:]
+        return SchemaEvolved(tree="domain", schema_id=o, keep=keep, add=(tag,))
+
+    return {
+        2: evolve(schemas[0], "evolved_a"),
+        5: Freeze(),
+        # arrives inside the initial-load window -> deferred until the Thaw
+        6: evolve(schemas[1], "evolved_b"),
+        7: Thaw(),
+        9: VersionDeleted(tree="domain", schema_id=schemas[0], version=1),
+    }
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=12, help="train steps")
+    ap.add_argument("--chunk-size", type=int, default=256)
+    ap.add_argument("--instances", type=int, default=0,
+                    help="run the scripted stream over an N-instance Cluster")
+    args = ap.parse_args()
+
+    import repro.configs as C
+    from repro.train.loop import TrainConfig, train
+    from repro.train.optimizer import AdamWConfig
+
     sc = build_scenario(ScenarioConfig(n_schemas=8, versions_per_schema=3, seed=1))
     coord = StateCoordinator(sc.registry, sc.dpm)
-    app = METLApp(coord)
     vocab = 4096
     batcher = CanonicalBatcher(vocab=vocab, seq_len=32, batch_size=4)
-    cursor = {"pos": 0, "source": EventSource(sc.registry, seed=0)}
+    sink = BatcherSink(batcher)
+    control = scripted_control(coord.registry)
+    stream = EventSource(sc.registry, seed=0)
 
-    def evolve_some_schema(step):
-        """The semi-automated registry workflow (paper §3.3) firing mid-run."""
-        reg = coord.registry
-        o = reg.domain.schema_ids()[step % len(reg.domain.schema_ids())]
-        v = reg.domain.latest_version(o)
-        keep = [a.name for a in reg.domain.get(o, v).attributes][1:]  # drop one
-
-        def mutate(r):
-            r.evolve(r.domain, o, keep=keep, add=[f"evolved_{step}"])
-            return ("added_domain", o, v + 1)
-
-        coord.apply_update(mutate)
-        report = coord.last_report
-        # a new source for the new state (events carry the registry state)
-        cursor["source"] = EventSource(reg, seed=step)
-        print(
-            f"  [state {reg.state}] schema {o} -> v{v+1}: "
-            f"+{len(report.new_blocks)} blocks, shrunk {len(report.shrunk_blocks)} "
-            f"(user review: {report.needs_user_review})"
+    if args.instances > 1:
+        runtime = Cluster.over_stream(
+            coord, stream, instances=args.instances,
+            chunk_size=args.chunk_size, control=control, sinks=[sink],
         )
+        pull = runtime.run
+    else:
+        app = METLApp(coord)
+        source = EventChunkSource(
+            stream, chunk_size=args.chunk_size, control=control
+        )
+        runtime = Pipeline(source, app, [sink])
+        pull = runtime.run
+
+    seen_log = {"n": 0}
 
     def batch_fn(step):
-        if step in (8, 16, 24):
-            evolve_some_schema(step)
         while not batcher.ready():
-            batcher.add_rows(app.consume(cursor["source"].slice(cursor["pos"], 256)))
-            cursor["pos"] += 256
+            pull()  # backpressured: BatcherSink is full once a batch is ready
+        for rec in coord.control_log[seen_log["n"]:]:
+            print(f"  [state {rec.state}] applied {rec.event!r}")
+        seen_log["n"] = len(coord.control_log)
         return batcher.next_batch()
 
     cfg = C.get_smoke("olmo_1b").replace(vocab=vocab)
-    tc = TrainConfig(steps=30, batch=4, seq=32, log_every=5,
+    tc = TrainConfig(steps=args.steps, batch=4, seq=32, log_every=5,
                      opt=AdamWConfig(lr=1e-3, warmup_steps=5))
     train(cfg, tc, batch_fn=batch_fn,
           on_step=lambda s, m: print(f"step {s:3d} loss {m['loss']:.4f}"))
-    print(f"final ETL stats: {dict(app.stats)} | final state i={coord.registry.state}")
-    assert app.stats["stale"] == 0 or not app.strict_state
+
+    # drain the rest of the day's schedule: a short training run may stop
+    # before the stream reaches the later control positions, and every
+    # scheduled event (including the deferred one) must apply exactly once
+    n_scheduled = len(control)
+    for _ in range(50):
+        if len(coord.control_log) >= n_scheduled:
+            break
+        while batcher.ready():
+            batcher.next_batch()  # release the BatcherSink backpressure
+        if args.instances > 1:
+            runtime.run(max_rounds=args.instances)
+        else:
+            runtime.run(max_chunks=1)
+    for rec in coord.control_log[seen_log["n"]:]:
+        print(f"  [state {rec.state}] applied {rec.event!r}")
+    assert len(coord.control_log) == n_scheduled
+
+    if args.instances > 1:
+        print(f"cluster info: { {k: v for k, v in runtime.info().items() if k != 'per_instance'} }")
+        stats = {k: sum(int(a.stats[k]) for a in runtime.apps)
+                 for k in ("events", "mapped", "stale", "parked")}
+    else:
+        stats = {k: int(app.stats[k]) for k in ("events", "mapped", "stale", "parked")}
+    print(f"final ETL stats: {stats} | final state i={coord.registry.state}")
+
+    # the single-writer story: a fresh instance reconstructs the exact state
+    # by replaying the control log over the deterministic seed registry
+    seed = build_scenario(ScenarioConfig(n_schemas=8, versions_per_schema=3, seed=1))
+    replayed = replay_control_log(coord.control_log, seed.registry, seed.dpm)
+    assert replayed.registry.state == coord.registry.state
+    assert replayed.snapshot().dpm == coord.snapshot().dpm
+    print(f"control-log replay: {len(coord.control_log)} events -> "
+          f"state i={replayed.registry.state}, DPM bit-exact ✓")
 
 
 if __name__ == "__main__":

@@ -10,17 +10,28 @@
 #    sharded-vs-replicated fused-consume parity tests;
 # 2. an API-hygiene gate: no private METLApp reach-ins (``app._``) outside
 #    the repro.etl package -- launchers/benchmarks must use the public
-#    engine protocol (``app.engine.info()``, ``app.reset_dedup()``);
+#    engine protocol (``app.engine.info()``, ``app.reset_dedup()``) -- and
+#    no private Registry reach-ins (``registry._``) outside repro.core --
+#    state transitions go through the coordinator's control plane
+#    (``coordinator.apply(event)``) or public ``Registry.bump_state()``;
 # 3. the streaming-pipeline example (two sinks, async double-buffered
 #    consume) as an end-to-end smoke of the Pipeline API;
-# 4. a tiny-shape run of the mapping benchmark so the fused- and
+# 4. the mid-stream schema-evolution example: typed control events riding
+#    the stream in-band (SchemaEvolved + a Freeze/Thaw window with a
+#    deferred evolution + VersionDeleted), applied at chunk boundaries by
+#    the single-writer coordinator, with the control-log replay
+#    determinism check (the script asserts state + DPM bit-exactness);
+# 5. a tiny-shape run of the mapping benchmark so the fused- and
 #    sharded-engine perf paths (kernel, shard_map dispatcher, consume,
 #    sync-vs-async pipeline, columnar densify) can't rot silently even when
 #    no test exercises the timing harness.  bench_mapping itself exits
 #    non-zero -- failing this gate -- if the fused engine's dispatches-per-
-#    chunk regress above 1 (direct consume or async pipeline), if the
-#    columnar densify is SLOWER than the legacy dict walk at the bench's
-#    default chunk size, or if the two densify paths diverge bit-wise.
+#    chunk regress above 1 (direct consume, async pipeline, or any cluster
+#    instance across the epoch-transition A/B), if the columnar densify is
+#    SLOWER than the legacy dict walk at the bench's default chunk size,
+#    if the two densify paths diverge bit-wise, or if the epoch transition
+#    drops/duplicates rows (in-band vs out-of-band oracle, 4-instance
+#    cluster vs single instance).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -40,8 +51,19 @@ if git grep -nE "app\._|[A-Za-z0-9_)\]]\._(fused|sharded|compiled|seen|parked|re
 fi
 echo "clean"
 
+echo "== API hygiene (no private Registry reach-ins outside repro.core) =="
+if git grep -nE "registry\._[a-z]" -- src benchmarks examples ':!src/repro/core'; then
+  echo "FAIL: private Registry attributes reached from outside repro.core" >&2
+  echo "      (use coordinator.apply(ControlEvent) / Registry.bump_state())" >&2
+  exit 1
+fi
+echo "clean"
+
 echo "== pipeline example (two sinks, async double-buffered consume) =="
 python examples/pipeline_stream.py --chunks 4 --prompts 500
+
+echo "== mid-stream schema evolution (in-band control + log replay) =="
+python examples/schema_evolution.py --steps 4
 
 echo "== benchmark smoke (fused + sharded engine, sync-vs-async pipeline) =="
 python benchmarks/bench_mapping.py --smoke

@@ -88,6 +88,11 @@ class SchemaTree:
         self.root = root
         # {schema_id: {version: SchemaVersion}} with ordered dicts throughout.
         self._schemas: Dict[int, Dict[int, SchemaVersion]] = {}
+        # lazily-built uid -> equiv index; rebuilt only after a version
+        # add/delete (equivalence_root is called per attribute inside the
+        # automated-update and scenario-build loops, so rebuilding it per
+        # call made those quadratic in total attributes)
+        self._equiv_cache: Optional[Dict[int, Optional[int]]] = None
 
     # -- construction -------------------------------------------------------
     def add_version(self, sv: SchemaVersion) -> None:
@@ -102,11 +107,13 @@ class SchemaTree:
                 f"(schema {sv.schema_id}: have {sorted(versions)}, got {sv.version})"
             )
         versions[sv.version] = sv
+        self._equiv_cache = None
 
     def delete_version(self, schema_id: int, version: int) -> SchemaVersion:
         sv = self._schemas[schema_id].pop(version)
         if not self._schemas[schema_id]:
             del self._schemas[schema_id]
+        self._equiv_cache = None
         return sv
 
     # -- lookup -------------------------------------------------------------
@@ -155,7 +162,11 @@ class SchemaTree:
         return uid
 
     def _equiv_index(self) -> Dict[int, Optional[int]]:
-        return {a.uid: a.equiv for sv in self.blocks() for a in sv.attributes}
+        if self._equiv_cache is None:
+            self._equiv_cache = {
+                a.uid: a.equiv for sv in self.blocks() for a in sv.attributes
+            }
+        return self._equiv_cache
 
     def equivalent_in(
         self, uid: int, schema_id: int, version: int
@@ -191,9 +202,20 @@ class Registry:
                 "component must refresh before mapping"
             )
 
-    def _bump(self) -> int:
+    def bump_state(self) -> int:
+        """Advance the system state ``i`` without a tree mutation.
+
+        The public transition for matrix-level edits (a manual DPM upload
+        changes what every instance maps, so consumers must re-sync even
+        though neither tree moved) and for test harnesses that need to
+        leave a component behind on purpose.  Tree mutations (``evolve`` /
+        ``add_schema`` / ``delete_version``) bump implicitly.
+        """
         self.state += 1
         return self.state
+
+    def _bump(self) -> int:
+        return self.bump_state()
 
     # -- attribute fabrication ----------------------------------------------
     def new_attribute(self, name: str, equiv: Optional[int] = None) -> Attribute:
@@ -227,7 +249,7 @@ class Registry:
             attrs.append(self.new_attribute(name))
         sv = SchemaVersion(schema_id=schema_id, version=v + 1, attributes=attrs)
         tree.add_version(sv)
-        self._bump()
+        self.bump_state()
         return sv
 
     def add_schema(
@@ -239,12 +261,12 @@ class Registry:
             attributes=[self.new_attribute(n) for n in names],
         )
         tree.add_version(sv)
-        self._bump()
+        self.bump_state()
         return sv
 
     def delete_version(self, tree: SchemaTree, schema_id: int, version: int) -> None:
         tree.delete_version(schema_id, version)
-        self._bump()
+        self.bump_state()
 
     # -- matrix axis layout ---------------------------------------------------
     def row_axis(self) -> List[int]:

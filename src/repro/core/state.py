@@ -10,6 +10,18 @@ rules, which we enforce here:
     ``i`` and **evicts** every derived cache (the paper evicts Caffeine);
   * during initial-load windows state changes are disabled.
 
+**Control plane.**  State transitions are driven declaratively through
+:meth:`StateCoordinator.apply` with a typed control event
+(:mod:`repro.etl.control`: ``SchemaAdded`` / ``SchemaEvolved`` /
+``VersionDeleted`` / ``MatrixEdit`` / ``Freeze`` / ``Thaw``).  Every applied
+event is appended to the epoch-ordered, replayable ``control_log`` -- the
+coordinator is the pipeline's *single state writer*, and the log is the
+durable record of its writes: a fresh instance reconstructs any state ``i``
+by replaying the log over a seed registry
+(:func:`repro.etl.control.replay_control_log`).  The closure-based
+:meth:`apply_update` and :meth:`set_dpm` survive as thin deprecated shims;
+closure updates are logged as opaque (non-replayable) records.
+
 In the SPMD training framework the "instances" are the per-host data-loading
 processes of the mesh's ``data``/``pod`` axes: every host derives its shard
 of the canonical batch from (state i, step), so any host can recompute any
@@ -20,12 +32,13 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Callable, Dict, List, Optional, Tuple
+import weakref
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .dmm import DPM, transform_to_dusb, decompact_dusb, transform_to_dpm, DUSB
 from .registry import Registry, StaleStateError
 
-__all__ = ["SystemState", "StateCoordinator"]
+__all__ = ["SystemState", "StateCoordinator", "ControlRecord", "ClosureUpdate"]
 
 
 @dataclasses.dataclass
@@ -40,12 +53,59 @@ class SystemState:
             raise StaleStateError(f"instance state {self.i} != message state {other_i}")
 
 
+@dataclasses.dataclass(frozen=True)
+class ControlRecord:
+    """One applied control event, in application (epoch) order.
+
+    ``seq`` is the log position, ``state`` the registry state *after* the
+    event applied (``Freeze``/``Thaw`` leave it unchanged).  Replaying the
+    records of ``coordinator.control_log`` in order over a seed registry
+    reproduces every intermediate state bit-exactly
+    (:func:`repro.etl.control.replay_control_log`).
+    """
+
+    seq: int
+    state: int
+    event: Any
+
+
+class ClosureUpdate:
+    """Opaque log marker for the deprecated closure-based
+    :meth:`StateCoordinator.apply_update` path.
+
+    Carries the Algorithm-5 trigger tuple for observability, but the
+    registry mutation itself was an arbitrary closure, so the record is NOT
+    replayable -- which is exactly why the closure API is deprecated in
+    favour of the typed events in :mod:`repro.etl.control`.
+    """
+
+    op = "schema"
+    replayable = False
+
+    def __init__(self, mutate: Callable[[Registry], Tuple[str, int, int]]):
+        self._mutate = mutate
+        self.trigger: Optional[Tuple[str, int, int]] = None
+
+    def mutate(self, registry: Registry) -> Tuple[str, int, int]:
+        if self.trigger is not None:
+            raise RuntimeError(
+                "closure-based updates cannot be replayed; use the typed "
+                "control events (repro.etl.control) for replayable logs"
+            )
+        self.trigger = self._mutate(registry)
+        return self.trigger
+
+    def __repr__(self) -> str:  # log readability
+        return f"ClosureUpdate(trigger={self.trigger})"
+
+
 class StateCoordinator:
     """Single-writer coordinator for state transitions.
 
     Owns the registry and the authoritative DPM; hands out immutable
-    :class:`SystemState` snapshots to instances.  ``freeze()`` implements the
-    paper's initial-load windows: "during these slots, changes to the
+    :class:`SystemState` snapshots to instances.  All transitions flow
+    through :meth:`apply` (see the module docstring); ``Freeze`` implements
+    the paper's initial-load windows: "during these slots, changes to the
     schemata and, therefore, to the distributed system and the matrix, can
     be disabled".
     """
@@ -55,7 +115,13 @@ class StateCoordinator:
         self.registry = registry
         self._dpm: DPM = dict(dpm or {})
         self._frozen = False
-        self._evict_hooks: List[Callable[[int], None]] = []
+        self._evict_hooks: List[Any] = []
+        # the epoch-ordered single-writer log: every applied control event,
+        # in application order, with the state it produced
+        self.control_log: List[ControlRecord] = []
+        # schema changes deferred by apply(..., defer_frozen=True) during an
+        # initial-load window; re-admitted in arrival order by Thaw
+        self._deferred: List[Any] = []
 
     # -- snapshots -----------------------------------------------------------
     def snapshot(self) -> SystemState:
@@ -63,21 +129,56 @@ class StateCoordinator:
             return SystemState(i=self.registry.state, dpm=dict(self._dpm))
 
     # -- cache-eviction fan-out (the Caffeine analogue) ----------------------
-    def on_evict(self, hook: Callable[[int], None]) -> None:
-        self._evict_hooks.append(hook)
+    def on_evict(self, hook: Callable[[int], None], *, weak: bool = False) -> None:
+        """Register an eviction hook ``hook(new_state)``.
+
+        With ``weak=True`` the hook must be a *bound method* and the
+        coordinator holds only a weak reference to its owner: when the owner
+        is garbage-collected the hook is pruned at the next eviction instead
+        of keeping dead instances alive forever (METL apps register this
+        way -- constructing many apps against one coordinator must not grow
+        the hook list without bound).
+        """
+        self._evict_hooks.append(weakref.WeakMethod(hook) if weak else hook)
+
+    @property
+    def n_evict_hooks(self) -> int:
+        """Live hook count (dead weak hooks are pruned on eviction)."""
+        return len(self._evict_hooks)
 
     def _evict_all(self) -> None:
+        i = self.registry.state
+        live: List[Any] = []
         for hook in self._evict_hooks:
-            hook(self.registry.state)
+            if isinstance(hook, weakref.WeakMethod):
+                fn = hook()
+                if fn is None:  # owner collected: prune silently
+                    continue
+                fn(i)
+            else:
+                hook(i)
+            live.append(hook)
+        self._evict_hooks = live
 
     # -- load windows ---------------------------------------------------------
+    @property
+    def frozen(self) -> bool:
+        return self._frozen
+
+    @property
+    def deferred_control(self) -> Tuple[Any, ...]:
+        """Schema changes queued during the current initial-load window."""
+        return tuple(self._deferred)
+
     def freeze(self) -> None:
-        with self._lock:
-            self._frozen = True
+        from ..etl.control import Freeze  # core must not import etl at load
+
+        self.apply(Freeze())
 
     def thaw(self) -> None:
-        with self._lock:
-            self._frozen = False
+        from ..etl.control import Thaw  # core must not import etl at load
+
+        self.apply(Thaw())
 
     def _require_mutable(self) -> None:
         if self._frozen:
@@ -86,31 +187,89 @@ class StateCoordinator:
             )
 
     # -- transitions -----------------------------------------------------------
-    def apply_update(
-        self, mutate: Callable[[Registry], Tuple[str, int, int]]
-    ) -> SystemState:
-        """Run a registry mutation + automated DPM update atomically.
+    def apply(self, event: Any, *, defer_frozen: bool = False) -> SystemState:
+        """Apply one typed control event; the single-writer transition.
 
-        ``mutate`` performs the registry change and returns the Algorithm-5
-        trigger tuple.  Every derived cache is then evicted.
+        ``event`` is any object implementing the control protocol
+        (:mod:`repro.etl.control`): an ``op`` of ``"freeze"`` / ``"thaw"`` /
+        ``"matrix"`` / ``"schema"``, plus ``mutate(registry) -> trigger``
+        for schema changes and ``dpm`` for matrix edits.  Schema changes run
+        the registry mutation and the Algorithm-5 automated DPM update
+        atomically, then evict every derived cache; the applied event is
+        appended to :attr:`control_log`.
+
+        During an initial-load window (``Freeze``) schema/matrix changes
+        raise -- or, with ``defer_frozen=True`` (the streaming pipeline's
+        in-band mode), are queued and re-admitted in arrival order when the
+        ``Thaw`` lands.  Returns the resulting :class:`SystemState`.
         """
         from .dmm import auto_update_dpm
 
+        op = getattr(event, "op", None)
+        if op not in ("freeze", "thaw", "matrix", "schema"):
+            raise TypeError(
+                f"not a control event: {event!r} (see repro.etl.control)"
+            )
+        evict = False
+        report = None
         with self._lock:
-            self._require_mutable()
-            change = mutate(self.registry)
-            self._dpm, report = auto_update_dpm(self._dpm, self.registry, change)
-        self._evict_all()
-        self.last_report = report
-        return SystemState(i=self.registry.state, dpm=dict(self._dpm))
+            if op == "freeze":
+                self._frozen = True
+            elif op == "thaw":
+                self._frozen = False
+            elif self._frozen:
+                if defer_frozen:
+                    # queued, NOT logged: the log records applied events only
+                    self._deferred.append(event)
+                    return SystemState(i=self.registry.state, dpm=dict(self._dpm))
+                raise RuntimeError(
+                    "state changes are disabled during an initial-load window"
+                )
+            elif op == "matrix":
+                self._dpm = dict(event.dpm)
+                self.registry.bump_state()
+                evict = True
+            else:  # op == "schema"
+                change = event.mutate(self.registry)
+                self._dpm, report = auto_update_dpm(self._dpm, self.registry, change)
+                evict = True
+            self.control_log.append(
+                ControlRecord(
+                    seq=len(self.control_log),
+                    state=self.registry.state,
+                    event=event,
+                )
+            )
+            snap = SystemState(i=self.registry.state, dpm=dict(self._dpm))
+        if report is not None:
+            self.last_report = report
+        if evict:
+            self._evict_all()
+        if op == "thaw" and self._deferred:
+            deferred, self._deferred = self._deferred, []
+            for ev in deferred:  # re-admitted in arrival order
+                snap = self.apply(ev)
+        return snap
+
+    def apply_update(
+        self, mutate: Callable[[Registry], Tuple[str, int, int]]
+    ) -> SystemState:
+        """Deprecated closure shim: run a registry mutation + automated DPM
+        update atomically.
+
+        ``mutate`` performs the registry change and returns the Algorithm-5
+        trigger tuple.  Prefer :meth:`apply` with a typed event from
+        :mod:`repro.etl.control` -- the closure is logged as an opaque,
+        non-replayable :class:`ClosureUpdate` record.
+        """
+        return self.apply(ClosureUpdate(mutate))
 
     def set_dpm(self, dpm: DPM) -> None:
-        """Manual matrix edit (UI / CSV upload path)."""
-        with self._lock:
-            self._require_mutable()
-            self._dpm = dict(dpm)
-            self.registry._bump()
-        self._evict_all()
+        """Deprecated shim for a manual matrix edit (UI / CSV upload path);
+        prefer ``apply(MatrixEdit(dpm=...))``."""
+        from ..etl.control import MatrixEdit  # core must not import etl at load
+
+        self.apply(MatrixEdit(dpm=dpm))
 
     # -- hybrid persistence (paper SS6.2) --------------------------------------
     def to_dusb(self) -> DUSB:

@@ -1,4 +1,15 @@
 from .events import CDCEvent, ColumnarChunk, EventSource, columnarize  # noqa: F401
+from .control import (  # noqa: F401
+    ControlEvent,
+    ControlReplayError,
+    Freeze,
+    MatrixEdit,
+    SchemaAdded,
+    SchemaEvolved,
+    Thaw,
+    VersionDeleted,
+    replay_control_log,
+)
 from .engines import (  # noqa: F401
     BlocksEngine,
     FusedEngine,
@@ -19,7 +30,9 @@ from .pipeline import (  # noqa: F401
     Pipeline,
     PipelineStats,
     RowSink,
+    ScriptedControlSource,
     Source,
     TableSink,
     TokenizerSink,
 )
+from .cluster import Cluster, ClusterStats  # noqa: F401

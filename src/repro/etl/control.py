@@ -1,0 +1,219 @@
+"""Typed control-plane events: schema changes as first-class stream citizens.
+
+The paper's DMM claims *automated updates in response to schema changes* on
+a live stream (SS5.4) across horizontally-scaled METL instances that must
+all run the same state ``i`` (SS3.4, SS5.5).  This module is that claim as
+an API: each schema-registry workflow step is a typed, immutable
+:class:`ControlEvent` that can travel **in-band** with the CDC data stream
+(:mod:`repro.etl.pipeline` applies them at chunk boundaries) and is applied
+declaratively by the single-writer coordinator
+(:meth:`repro.core.state.StateCoordinator.apply`), which appends every
+applied event to its epoch-ordered ``control_log``.
+
+Event -> paper mapping:
+
+  :class:`SchemaAdded`     a brand-new extraction schema or CDM entity
+      registered at version 1 (SS3.3 semi-automated registry workflow; the
+      Algorithm-5 ``added_*`` trigger with nothing to copy).
+  :class:`SchemaEvolved`   version v -> v+1 of an existing schema: kept
+      attributes re-issued with equivalence links, fresh ones added
+      (SS5.4.1, Fig. 6 -- the trigger the automated update copies blocks
+      across).
+  :class:`VersionDeleted`  retirement of one schema version; Algorithm-5
+      cases (1)/(2) drop the version's row/column blocks (SS5.4.2).
+  :class:`MatrixEdit`      the manual mapping-matrix edit (UI / CSV upload,
+      SS3.3): a full DPM replacement that bumps ``i`` without touching the
+      trees.
+  :class:`Freeze`/:class:`Thaw`  the initial-load windows of SS3.4/SS6.4:
+      "during these slots, changes to the schemata and, therefore, to the
+      distributed system and the matrix, can be disabled".  Data keeps
+      flowing; schema changes arriving inside the window are rejected (or,
+      in-band, deferred and re-admitted by the ``Thaw``).
+
+Every schema event knows its Algorithm-5 trigger tuple
+(``(kind, schema_id, version)``): :meth:`ControlEvent.mutate` performs the
+registry mutation and returns the trigger the coordinator feeds to
+:func:`repro.core.dmm.auto_update_dpm`.
+
+**Log replay** (:func:`replay_control_log`) is the durable single-writer
+story: a fresh instance reconstructs any state ``i`` by replaying the
+coordinator's ``control_log`` over a seed registry -- typed events are pure
+data, so the replayed registry, state counter and DPM are bit-identical to
+the original's.  Closure-based ``apply_update`` records are opaque and make
+a log non-replayable (:class:`ControlReplayError`), which is why that path
+is deprecated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Optional, Tuple
+
+from ..core.dmm import DPM
+from ..core.registry import Registry, SchemaTree
+from ..core.state import ControlRecord, StateCoordinator
+
+__all__ = [
+    "ControlEvent",
+    "SchemaAdded",
+    "SchemaEvolved",
+    "VersionDeleted",
+    "MatrixEdit",
+    "Freeze",
+    "Thaw",
+    "ControlReplayError",
+    "replay_control_log",
+]
+
+
+class ControlReplayError(RuntimeError):
+    """A control log contains a record that cannot be replayed (an opaque
+    closure-based update); the reconstructing instance must restore from a
+    DUSB snapshot instead."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlEvent:
+    """Base of the typed control-event union (see module docstring).
+
+    ``op`` is the coordinator dispatch key (``"schema"`` events implement
+    :meth:`mutate`; ``"matrix"`` events carry ``dpm``; ``"freeze"`` /
+    ``"thaw"`` are pure window markers).  ``replayable`` marks whether a
+    log containing the event can reconstruct state from a seed registry.
+    """
+
+    op: ClassVar[str] = "schema"
+    replayable: ClassVar[bool] = True
+
+    def mutate(self, registry: Registry) -> Tuple[str, int, int]:
+        """Perform the registry mutation; return the Algorithm-5 trigger."""
+        raise NotImplementedError
+
+
+def _tree(registry: Registry, name: str) -> SchemaTree:
+    if name == "domain":
+        return registry.domain
+    if name == "range":
+        return registry.range
+    raise ValueError(f"tree must be 'domain' or 'range', got {name!r}")
+
+
+def _kind(name: str, added: bool) -> str:
+    return ("added_" if added else "deleted_") + name
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemaAdded(ControlEvent):
+    """Register a brand-new schema (version 1 by default) in one tree."""
+
+    tree: str  # "domain" (extraction schema) | "range" (CDM entity)
+    schema_id: int
+    names: Tuple[str, ...]
+    version: int = 1
+
+    def mutate(self, registry: Registry) -> Tuple[str, int, int]:
+        registry.add_schema(
+            _tree(registry, self.tree), self.schema_id, list(self.names),
+            version=self.version,
+        )
+        return (_kind(self.tree, added=True), self.schema_id, self.version)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemaEvolved(ControlEvent):
+    """Cut version v+1 of an existing schema: ``keep`` names are re-issued
+    with equivalence links (``a' == a``), ``add`` names are fresh."""
+
+    tree: str
+    schema_id: int
+    keep: Tuple[str, ...]
+    add: Tuple[str, ...] = ()
+
+    def mutate(self, registry: Registry) -> Tuple[str, int, int]:
+        tree = _tree(registry, self.tree)
+        v = tree.latest_version(self.schema_id)
+        registry.evolve(
+            tree, self.schema_id, keep=list(self.keep), add=list(self.add)
+        )
+        return (_kind(self.tree, added=True), self.schema_id, v + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class VersionDeleted(ControlEvent):
+    """Retire one schema version (Algorithm-5 cases 1/2: the version's
+    blocks leave the DPM)."""
+
+    tree: str
+    schema_id: int
+    version: int
+
+    def mutate(self, registry: Registry) -> Tuple[str, int, int]:
+        registry.delete_version(
+            _tree(registry, self.tree), self.schema_id, self.version
+        )
+        return (_kind(self.tree, added=False), self.schema_id, self.version)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MatrixEdit(ControlEvent):
+    """Manual matrix edit: replace the authoritative DPM wholesale and bump
+    ``i`` (the UI / CSV-upload path; no tree mutation, no Algorithm 5)."""
+
+    op: ClassVar[str] = "matrix"
+    dpm: DPM = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        # snapshot at construction: the event lives on in the control log,
+        # and a caller mutating its dict afterwards would silently break
+        # the log's bit-exact replay guarantee
+        object.__setattr__(self, "dpm", dict(self.dpm))
+
+
+@dataclasses.dataclass(frozen=True)
+class Freeze(ControlEvent):
+    """Open an initial-load window: schema/matrix changes are disabled
+    (rejected, or deferred when applied in-band) until the next Thaw."""
+
+    op: ClassVar[str] = "freeze"
+
+
+@dataclasses.dataclass(frozen=True)
+class Thaw(ControlEvent):
+    """Close the initial-load window and re-admit deferred schema changes
+    in their arrival order."""
+
+    op: ClassVar[str] = "thaw"
+
+
+def replay_control_log(
+    log: "list[ControlRecord]",
+    registry: Registry,
+    dpm: Optional[DPM] = None,
+) -> StateCoordinator:
+    """Reconstruct a coordinator by replaying a control log over a seed.
+
+    ``registry``/``dpm`` must be the seed the original coordinator started
+    from (e.g. a deterministic scenario rebuild, or a DUSB restore).  Every
+    record is re-applied in epoch order and its resulting state checked
+    against the recorded one; the returned coordinator's registry, state
+    counter and DPM are bit-identical to the original single writer's --
+    which is how a fresh METL instance joins a running deployment at the
+    current state ``i``.
+
+    Raises :class:`ControlReplayError` on opaque (closure-based) records or
+    on a state mismatch (wrong seed).
+    """
+    coord = StateCoordinator(registry, dpm)
+    for rec in log:
+        event = rec.event
+        if not getattr(event, "replayable", True):
+            raise ControlReplayError(
+                f"log record {rec.seq} is not replayable: {event!r}"
+            )
+        snap = coord.apply(event)
+        if snap.i != rec.state:
+            raise ControlReplayError(
+                f"replay diverged at record {rec.seq}: state {snap.i} != "
+                f"recorded {rec.state} (wrong seed registry?)"
+            )
+    return coord

@@ -219,7 +219,11 @@ class DenseChunk:
 
     ``plan`` pins the engine plan the chunk was densified against so
     dispatch/emit stay consistent even if the engine recompiles (state bump)
-    while the chunk is in flight.
+    while the chunk is in flight -- :attr:`epoch` names the pinned state
+    ``i``.  This pin is what keeps the pipeline's double-buffered async
+    consume bit-exact across a mid-stream schema evolution: a control event
+    may recompile the engine while chunk N is on device, but chunk N emits
+    against its own epoch's plan.
     """
 
     plan: Any
@@ -232,6 +236,11 @@ class DenseChunk:
     shard_sel: Optional[List[np.ndarray]] = None
     rows_sh: Optional[np.ndarray] = None  # (n_shards, S_loc) i32
     blks_sh: Optional[np.ndarray] = None  # (n_shards, S_loc) i32
+
+    @property
+    def epoch(self) -> Optional[int]:
+        """The state ``i`` this chunk was densified against (its plan's)."""
+        return getattr(self.plan, "state", None)
 
 
 @dataclasses.dataclass
@@ -453,9 +462,30 @@ class MappingEngine:
         return self.emit(self.dispatch(dense))
 
     def info(self) -> Dict[str, Any]:
-        """Public observability: engine name, shards, blocks, device-resident
-        table bytes, cumulative dispatch count.  The supported way for
-        launchers/benchmarks to read engine state (no private reach-ins)."""
+        """Public observability surface; the supported way for launchers,
+        benchmarks and the cluster runtime to read engine state (no private
+        reach-ins; CI grep-gates them).
+
+        Documented keys (every engine):
+
+          ``engine``      registered engine name (``fused``/``sharded``/...)
+          ``impl``        kernel implementation variant
+          ``n_shards``    mesh shards the plan is partitioned over (1 when
+                          replicated)
+          ``dispatches``  cumulative device dispatches through this engine
+
+        and, once a plan is compiled (absent while evicted):
+
+          ``state``                 the plan's system state ``i`` (its epoch)
+          ``n_blocks``              compacted blocks in the plan
+          ``blocks_per_shard``      blocks resident per shard
+          ``table_bytes``           device-resident block-table bytes, total
+          ``table_bytes_per_shard`` per-shard slice bytes (~ total/N sharded)
+          ``width``                 padded block-table row width (fused/
+                                    sharded only)
+
+        ``Cluster.info()`` (:mod:`repro.etl.cluster`) aggregates these per
+        instance."""
         raise NotImplementedError
 
 

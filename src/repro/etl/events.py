@@ -32,6 +32,14 @@ start.  Non-numeric payload values (str / bool / Decimal / ...) cannot enter
 the float32 value column: :func:`columnarize` flags the carrying event in
 ``bad`` and triage routes it to the dead-letter path with a counted stat
 instead of crashing (or silently truncating) inside the scatter.
+
+**In-band control.**  Data events are one half of the stream; the other is
+the typed control plane (:mod:`repro.etl.control`): schema-change events
+travel through the same stream and are applied at chunk boundaries.  Slices
+stay pure in (registry state, position) ACROSS control events -- a chunk
+sliced after an evolution is generated at the new state, which is what
+makes replayed/re-sliced chunks deterministic on every instance of a
+:class:`~repro.etl.cluster.Cluster`.
 """
 
 from __future__ import annotations

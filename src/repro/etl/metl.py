@@ -25,8 +25,10 @@ with chunked pull, sink fan-out (DW + ML platform, paper SS5.5) and
 double-buffered async consume that overlaps chunk N+1's host-side
 densification with chunk N's device dispatch.
 
-State lifecycle: a coordinator state bump evicts the engine plan (the
-Caffeine analogue); the next consume re-snapshots and recompiles.  Parked
+State lifecycle: a coordinator state bump -- typically a typed control
+event applied through :meth:`repro.core.state.StateCoordinator.apply`
+(:mod:`repro.etl.control`), in-band or out-of-band -- evicts the engine
+plan (the Caffeine analogue); the next consume re-snapshots and recompiles.  Parked
 events (from the app's future) replay through :meth:`refresh`; replays are
 counted only under ``stats["replayed"]``, never a second time under
 ``stats["events"]``.  Dead-lettered events (from the past) are cleared by
@@ -94,7 +96,10 @@ class METLApp:
         # triage/state rather than called by the user); delivered by the
         # next consume() / take_replayed() so they are never lost
         self._replay_rows: List[CanonicalRow] = []
-        coordinator.on_evict(lambda i: self.evict())
+        # weak registration: the coordinator must not keep this app alive
+        # (or keep evicting its corpse) after the owner drops it -- the
+        # bench/test pattern constructs many apps against one coordinator
+        coordinator.on_evict(self._on_coordinator_evict, weak=True)
         self.refresh()
 
     # -- state management -----------------------------------------------------
@@ -129,6 +134,9 @@ class METLApp:
             self._seen.pop(ev.key, None)
         self.dead_letter.clear()
         return pos
+
+    def _on_coordinator_evict(self, i: int) -> None:
+        self.evict()
 
     def evict(self) -> None:
         """Cache eviction on state change (the Caffeine analogue)."""

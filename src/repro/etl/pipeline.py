@@ -58,6 +58,27 @@ vs sync on CPU) instead of overlapping.  ``densify_thread=True`` opts the
 worker thread back in for runtimes where that tradeoff flips (free-threaded
 python, or accelerator backends where device time dwarfs host python).
 
+**In-band control.**  :meth:`Source.poll` may interleave typed
+:class:`~repro.etl.control.ControlEvent`\\ s (schema evolutions, matrix
+edits, freeze/thaw windows) with the data chunks -- the control plane rides
+the same stream as the data, like the paper's schema-registry workflow
+firing against a live CDC topic.  The pipeline applies each control event
+at the chunk boundary where it arrives (single writer:
+``app.coordinator.apply(event, defer_frozen=True)`` by default; a
+:class:`~repro.etl.cluster.Cluster` overrides ``apply_control`` so one
+coordinator applies each event exactly once across N instances).  The
+eviction -> lazy recompile -> parked-replay machinery downstream is exactly
+the engine-protocol seam: chunks densified *before* the boundary stay
+pinned to their epoch's plan (``DenseChunk.plan``/``.epoch``), so async
+double-buffered consume stays bit-exact across a mid-stream evolution --
+the async loop drains its lookahead at a control boundary, which makes the
+(refresh, replay, next-chunk) ordering identical to the sync path.
+``EventChunkSource(control={chunk_index: event})`` injects scripted
+evolutions at chunk positions; :class:`ScriptedControlSource` wraps any
+source the same way.  Control events do not count against
+``run(max_chunks=)`` budgets and are applied exactly once (a replay
+``reset_offset`` re-delivers data, never control).
+
 Sinks:
 
   * :class:`TokenizerSink` -- feeds the serve batcher: rows -> token prompt
@@ -76,22 +97,49 @@ from __future__ import annotations
 
 import concurrent.futures
 import dataclasses
-import itertools
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
+from typing import (
+    Callable,
+    Dict,
+    Iterator,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+    Union,
+)
 
 import numpy as np
 
 from .batcher import CanonicalBatcher, tokenize_row
+from .control import ControlEvent
 from .engines import CanonicalRow
 from .events import CDCEvent, ColumnarChunk, EventSource
 from .metl import METLApp
 
 Chunk = Union[List[CDCEvent], ColumnarChunk]
+StreamItem = Union[Chunk, ControlEvent]
+# a chunk-position -> scripted control schedule; values may be one event or
+# an ordered batch of events to emit before that chunk
+ControlSchedule = Dict[int, Union[ControlEvent, Sequence[ControlEvent]]]
+
+
+def _pop_scheduled(
+    schedule: ControlSchedule, emitted: set, key: int
+) -> Sequence[ControlEvent]:
+    """The exactly-once schedule pop shared by the scripted sources: the
+    event(s) scheduled at ``key``, or nothing if absent / already emitted
+    (a replay rewind re-delivers data, never control)."""
+    evs = schedule.get(key)
+    if evs is None or key in emitted:
+        return ()
+    emitted.add(key)
+    return evs if isinstance(evs, (list, tuple)) else (evs,)
 
 __all__ = [
     "Source",
     "EventChunkSource",
     "ListSource",
+    "ScriptedControlSource",
     "RowSink",
     "TokenizerSink",
     "TableSink",
@@ -120,6 +168,12 @@ class Source:
     def chunks(self) -> Iterator[Chunk]:
         raise NotImplementedError
 
+    def poll(self) -> Iterator[StreamItem]:
+        """The in-band stream: data chunks, possibly interleaved with
+        :class:`~repro.etl.control.ControlEvent`\\ s.  The pipeline pulls
+        through this method; the default is the plain data stream."""
+        return self.chunks()
+
     def reset_offset(self, pos: int) -> None:
         raise NotImplementedError
 
@@ -127,13 +181,27 @@ class Source:
 class EventChunkSource(Source):
     """Chunked cursor over an :class:`~repro.etl.events.EventSource` stream.
 
-    The cursor persists across ``chunks()`` calls, so a pipeline stopped by
-    sink backpressure resumes exactly where it left off.  ``max_chunks``
-    bounds the *lifetime* pull count (None = unbounded stream); a
-    :meth:`reset_offset` rewind re-aims the position-derived budget rather
-    than burning extra pulls.  With ``columnar=True`` (the default) chunks
-    are built columnar at the source boundary
+    The cursor persists across ``poll()``/``chunks()`` calls, so a pipeline
+    stopped by sink backpressure resumes exactly where it left off.
+    ``max_chunks`` bounds the *lifetime* pull count (None = unbounded
+    stream); a :meth:`reset_offset` rewind re-aims the position-derived
+    budget rather than burning extra pulls.  With ``columnar=True`` (the
+    default) chunks are built columnar at the source boundary
     (:meth:`~repro.etl.events.EventSource.slice_columnar`).
+
+    ``stride``/``offset`` slice the global chunk grid deterministically for
+    horizontal scaling: instance ``k`` of ``N`` takes chunk indices ``k,
+    k+N, k+2N, ...`` (``stride=N, offset=k``), so the union over instances
+    is exactly the single-instance chunk set and any instance can recompute
+    any other's slice (the :class:`~repro.etl.cluster.Cluster` contract).
+
+    ``control`` schedules in-band control events on the *global* chunk
+    grid: ``{chunk_index: event(s)}`` is emitted immediately before that
+    chunk is sliced (so a scheduled evolution re-shapes the very chunk it
+    precedes).  Scheduled events fire exactly once -- a replay
+    :meth:`reset_offset` re-delivers data at the current state but never
+    re-applies control -- and only from the source that owns the index, so
+    sliced instances can all share one schedule.
     """
 
     def __init__(
@@ -144,22 +212,51 @@ class EventChunkSource(Source):
         chunk_size: int = 256,
         max_chunks: Optional[int] = None,
         columnar: bool = True,
+        control: Optional[ControlSchedule] = None,
+        stride: int = 1,
+        offset: int = 0,
     ):
+        if stride < 1 or not (0 <= offset < stride):
+            raise ValueError(f"need stride >= 1 and 0 <= offset < stride, "
+                             f"got stride={stride} offset={offset}")
         self.source = source
         self.chunk_size = chunk_size
         self.max_chunks = max_chunks
         self.columnar = columnar
+        self.control: ControlSchedule = dict(control or {})
+        self.stride = stride
+        self.offset = offset
         self._start = start
-        self._pos = start
+        self._idx = offset  # global chunk index of the next owned chunk
         self._pulled = 0
+        self._control_emitted: set = set()
 
-    def chunks(self) -> Iterator[Chunk]:
+    @property
+    def next_index(self) -> int:
+        """Global chunk-grid index of the next chunk this source will pull."""
+        return self._idx
+
+    def poll(self) -> Iterator[StreamItem]:
         slicer = self.source.slice_columnar if self.columnar else self.source.slice
         while self.max_chunks is None or self._pulled < self.max_chunks:
-            chunk = slicer(self._pos, self.chunk_size)
-            self._pos += self.chunk_size
+            j = self._idx
+            for ev in _pop_scheduled(self.control, self._control_emitted, j):
+                yield ev
+            # sliced AFTER any scheduled control applied: the generator only
+            # resumes here once the pipeline consumed (and applied) the
+            # control yields above, so the chunk reflects the new state
+            chunk = slicer(self._start + j * self.chunk_size, self.chunk_size)
+            self._idx = j + self.stride
             self._pulled += 1
             yield chunk
+
+    def chunks(self) -> Iterator[Chunk]:
+        if self.control:
+            raise ValueError(
+                "this source carries in-band control events; iterate poll() "
+                "(chunks() would silently skip the scheduled control)"
+            )
+        return self.poll()  # type: ignore[return-value]
 
     def reset_offset(self, pos: int) -> None:
         """Rewind to the chunk-grid slice containing stream position ``pos``.
@@ -167,34 +264,41 @@ class EventChunkSource(Source):
         Aligning down to the grid keeps re-slicing deterministic: the
         re-delivered chunks have exactly the boundaries the original pull
         had, so every host (and every replay) regenerates identical slices.
+        On a strided source the rewind lands on the owning grid step when
+        this source owns ``pos``'s chunk, else on its next owned chunk.
         """
         n = max(0, pos - self._start) // self.chunk_size
-        self._pos = self._start + n * self.chunk_size
-        self._pulled = min(self._pulled, int(n))
+        m = max(0, -(-(n - self.offset) // self.stride))
+        self._idx = self.offset + m * self.stride
+        self._pulled = min(self._pulled, int(m))
 
 
 class ListSource(Source):
-    """A fixed, pre-materialised list of chunks (tests, benchmarks).
+    """A fixed, pre-materialised list of stream items (tests, benchmarks).
 
-    Like :class:`EventChunkSource`, the cursor persists across ``chunks()``
-    calls: a pipeline stopped by backpressure resumes at the next unpulled
-    chunk instead of re-delivering from the start.  :meth:`reset_offset`
-    rewinds a (possibly finished) cursor to the first chunk holding the
-    requested stream position, so dead-letter replay re-delivers the same
-    chunk objects deterministically."""
+    Items may be data chunks or in-band :class:`ControlEvent`\\ s -- a
+    scripted stream spelled out literally.  Like :class:`EventChunkSource`,
+    the cursor persists across ``chunks()`` calls: a pipeline stopped by
+    backpressure resumes at the next unpulled item instead of re-delivering
+    from the start.  :meth:`reset_offset` rewinds a (possibly finished)
+    cursor to the first chunk holding the requested stream position, so
+    dead-letter replay re-delivers the same chunk objects deterministically
+    (control items are never re-delivered: the rewind lands on data)."""
 
-    def __init__(self, chunks: Sequence[Chunk]):
+    def __init__(self, chunks: Sequence[StreamItem]):
         self._chunks = list(chunks)
         self._cursor = 0
 
-    def chunks(self) -> Iterator[Chunk]:
+    def chunks(self) -> Iterator[StreamItem]:
         while self._cursor < len(self._chunks):
             chunk = self._chunks[self._cursor]
             self._cursor += 1
             yield chunk
 
     @staticmethod
-    def _events(chunk: Chunk) -> List[CDCEvent]:
+    def _events(chunk: StreamItem) -> List[CDCEvent]:
+        if isinstance(chunk, ControlEvent):
+            return []
         return chunk.events if isinstance(chunk, ColumnarChunk) else chunk
 
     def reset_offset(self, pos: int) -> None:
@@ -206,6 +310,44 @@ class ListSource(Source):
                 self._cursor = k
                 return
         self._cursor = len(self._chunks)
+
+
+class ScriptedControlSource(Source):
+    """Wrap ANY source, injecting scripted control events at data-chunk
+    positions: ``control={k: event(s)}`` emits before the k-th data chunk
+    the wrapped source delivers through this wrapper (0-based, counted
+    across ``poll()`` calls).  Control the inner source already carries
+    in-band passes through untouched; scheduled events fire exactly once,
+    and :meth:`reset_offset` delegates to the inner source without
+    re-arming them."""
+
+    def __init__(self, inner: Source, control: ControlSchedule):
+        self.inner = inner
+        self.control: ControlSchedule = dict(control)
+        self._count = 0  # data chunks delivered through this wrapper
+        self._emitted: set = set()
+
+    def poll(self) -> Iterator[StreamItem]:
+        it = self.inner.poll()
+        while True:
+            for ev in _pop_scheduled(self.control, self._emitted, self._count):
+                yield ev
+            item = next(it, None)
+            if item is None:
+                return
+            yield item
+            if not isinstance(item, ControlEvent):
+                self._count += 1
+
+    def chunks(self) -> Iterator[Chunk]:
+        if self.control:
+            raise ValueError(
+                "this source carries in-band control events; iterate poll()"
+            )
+        return self.inner.chunks()
+
+    def reset_offset(self, pos: int) -> None:
+        self.inner.reset_offset(pos)
 
 
 # -- sinks --------------------------------------------------------------------
@@ -305,11 +447,13 @@ class PipelineStats:
     chunks: int = 0
     events: int = 0
     rows: int = 0
+    control: int = 0  # in-band control events applied this run
 
 
 class Pipeline:
-    """``Source -> METLApp -> [RowSink, ...]`` with chunked pull and
-    optional double-buffered async consume (see module docstring)."""
+    """``Source -> METLApp -> [RowSink, ...]`` with chunked pull, in-band
+    control application at chunk boundaries, and optional double-buffered
+    async consume (see module docstring)."""
 
     def __init__(
         self,
@@ -319,12 +463,21 @@ class Pipeline:
         *,
         async_consume: bool = False,
         densify_thread: bool = False,
+        apply_control: Optional[Callable[[ControlEvent], None]] = None,
     ):
         self.source = source
         self.app = app
         self.sinks = list(sinks)
         self.async_consume = async_consume
         self.densify_thread = densify_thread
+        # how in-band control events reach the single writer.  Default: this
+        # pipeline's coordinator applies directly (deferring schema changes
+        # that land inside a Freeze window); a Cluster passes a shared
+        # applier so ONE coordinator applies each event exactly once across
+        # all instances.
+        self.apply_control = apply_control or (
+            lambda ev: self.app.coordinator.apply(ev, defer_frozen=True)
+        )
         self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
         # lookahead chunk an async run triaged+densified but had to stop
         # before dispatching (a sink went full); mapped first on resume so
@@ -343,14 +496,46 @@ class Pipeline:
         """Triage + densify one chunk (the host-side half of consume)."""
         return self.app.engine.densify(self.app.triage(chunk))
 
+    # -- in-band control -------------------------------------------------------
+    def _control(self, event: ControlEvent, st: PipelineStats) -> None:
+        """Apply one in-band control event at a chunk boundary (single
+        writer; the eviction fan-out invalidates every instance's plan and
+        the next triage lazily recompiles + replays parked events)."""
+        self.apply_control(event)
+        st.control += 1
+
+    def _next_data(self, it: Iterator[StreamItem], st: PipelineStats) -> Optional[Chunk]:
+        """Pull the next data chunk, applying any control events in-band."""
+        while True:
+            item = next(it, None)
+            if not isinstance(item, ControlEvent):
+                return item
+            self._control(item, st)
+
+    @staticmethod
+    def _budget(it: Iterator[StreamItem], pulls: int) -> Iterator[StreamItem]:
+        """Stop after ``pulls`` DATA chunks.  In-band control events don't
+        count against the budget, and nothing is pulled past the last
+        budgeted chunk (a control event scheduled after it stays queued in
+        the source for the next run)."""
+        n = 0
+        while n < pulls:
+            item = next(it, None)
+            if item is None:
+                return
+            yield item
+            if not isinstance(item, ControlEvent):
+                n += 1
+
     # -- run ------------------------------------------------------------------
     def run(self, *, max_chunks: Optional[int] = None) -> PipelineStats:
-        """Pull chunks until the source is exhausted, a sink reports full,
-        or ``max_chunks`` chunks have been mapped this call.  Returns this
-        run's counters; safe to call repeatedly (the source cursor and any
-        pending lookahead chunk persist across calls)."""
+        """Pull until the source is exhausted, a sink reports full, or
+        ``max_chunks`` data chunks have been mapped this call (in-band
+        control events ride for free).  Returns this run's counters; safe
+        to call repeatedly (the source cursor and any pending lookahead
+        chunk persist across calls)."""
         st = PipelineStats()
-        it = self.source.chunks()
+        it = self.source.poll()
         if max_chunks is not None:
             # a pending lookahead chunk counts against this run's budget --
             # but only when this run can actually map it: a still-
@@ -358,7 +543,7 @@ class Pipeline:
             # nothing, and charging it anyway would under-pull the budget
             pending_maps = self._pending is not None and not self._full()
             pulls = max_chunks - (1 if pending_maps else 0)
-            it = itertools.islice(it, max(0, pulls))
+            it = self._budget(it, max(0, pulls))
         if self.async_consume:
             self._run_async(it, st)
         else:
@@ -405,13 +590,16 @@ class Pipeline:
         replayed = self.app.take_replayed()
         return replayed + rows if replayed else rows
 
-    def _run_sync(self, it: Iterator[Chunk], st: PipelineStats) -> None:
+    def _run_sync(self, it: Iterator[StreamItem], st: PipelineStats) -> None:
         engine = self.app.engine
         if self._pending is not None:  # left over from a stopped async run
             if self._full():  # still backpressured: keep it for later
                 return
             chunk, dense = self._pending
             self._pending = None
+            # the pending chunk was densified before the stop; its dense
+            # form stays pinned to that epoch's plan even if control
+            # applied in between (DenseChunk.plan)
             rows = engine.emit(engine.dispatch(dense)) if dense is not None else []
             rows = self._emit_with_replay(rows)
             self._account(st, chunk, rows)
@@ -422,19 +610,32 @@ class Pipeline:
             # never mapped -- silently skipped events on the next run
             if self._full():
                 break
-            chunk = next(it, None)
-            if chunk is None:
+            item = next(it, None)
+            if item is None:
                 break
-            rows = self.app.consume(chunk)
-            self._account(st, chunk, rows)
+            if isinstance(item, ControlEvent):
+                # chunk boundary: the single writer applies, every instance
+                # evicts, the next chunk's triage lazily recompiles and
+                # replays parked events
+                self._control(item, st)
+                continue
+            rows = self.app.consume(item)
+            self._account(st, item, rows)
             self._fanout(rows)
 
-    def _run_async(self, it: Iterator[Chunk], st: PipelineStats) -> None:
+    def _run_async(self, it: Iterator[StreamItem], st: PipelineStats) -> None:
         """The double buffer: chunk N is dispatched (an async launch -- the
         outputs are futures computing on XLA's thread pool), chunk N+1 is
         triaged + densified while N executes, then emit(N) synchronises.
         Triage order stays strictly sequential and the stages touch
-        disjoint state, so the result is bit-exact with the sync path."""
+        disjoint state, so the result is bit-exact with the sync path.
+
+        An in-band control event is a buffer DRAIN point: chunk N is
+        finished completely (emit + fan-out) *before* the event applies,
+        and the following chunk is prepared fresh afterwards -- so the
+        (apply, evict, lazy refresh, parked replay, next chunk) ordering is
+        identical to the sync path and the epoch transition stays bit-exact.
+        Chunks already densified keep mapping against their pinned plan."""
         engine = self.app.engine
         if self._full():
             return
@@ -442,13 +643,32 @@ class Pipeline:
             chunk, dense = self._pending
             self._pending = None
         else:
-            chunk = next(it, None)
+            chunk = self._next_data(it, st)
             if chunk is None:
                 return
             dense = self._prepare(chunk)
         handle = engine.dispatch(dense) if dense is not None else None
         while chunk is not None:
             nxt = next(it, None)
+            if isinstance(nxt, ControlEvent):
+                # control boundary: drain the double buffer -- finish N on
+                # the old epoch, apply, then restart the overlap on the new
+                rows = engine.emit(handle) if handle is not None else []
+                rows = self._emit_with_replay(rows)
+                self._account(st, chunk, rows)
+                self._fanout(rows)
+                self._control(nxt, st)
+                if self._full():
+                    return
+                chunk = self._next_data(it, st)
+                if chunk is None:
+                    return
+                # this triage runs the lazy refresh: recompile at the new
+                # epoch + parked-event replay (drained with this chunk's
+                # emit, exactly like the sync path's consume())
+                dense = self._prepare(chunk)
+                handle = engine.dispatch(dense) if dense is not None else None
+                continue
             # the overlap: N+1's host-side densification runs while N's
             # dispatch is still in flight on device
             ahead = self._prepare_ahead(nxt) if nxt is not None else None

@@ -28,6 +28,16 @@ entrypoint.
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b --smoke \
         --etl --shards 4
+
+``--instances N`` (with ``--etl``) fans the stream over a multi-instance
+:class:`~repro.etl.cluster.Cluster`: N pipelines over deterministic
+round-robin slices of one chunk grid, one coordinator as the single state
+writer, and the bounded tokenizer sink as the merge fan-in (paper SS5.5
+horizontal scaling).  Composes with ``--shards`` (every instance runs the
+sharded engine on the same mesh) and ``--async-consume``.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b --smoke \
+        --etl --instances 4
 """
 
 from __future__ import annotations
@@ -42,15 +52,20 @@ def _etl_prompts(
     max_len: int = 16,
     shards: int = 0,
     async_consume: bool = False,
+    instances: int = 0,
 ):
     """Stream CDC events through the METL pipeline into token prompts.
 
     The pull topology is ``EventChunkSource -> METLApp -> TokenizerSink``:
     the bounded sink (``limit=n_requests``) backpressures the stream, so the
-    pipeline pulls exactly as many chunks as serving needs."""
+    pipeline pulls exactly as many chunks as serving needs.  With
+    ``instances > 1`` the stream is sliced deterministically over a
+    multi-instance :class:`~repro.etl.cluster.Cluster` (one coordinator as
+    the single state writer, the bounded sink as the merge fan-in)."""
     from repro.core.state import StateCoordinator
     from repro.core.synthetic import ScenarioConfig, build_scenario
     from repro.etl import (
+        Cluster,
         EventChunkSource,
         EventSource,
         METLApp,
@@ -60,24 +75,53 @@ def _etl_prompts(
 
     sc = build_scenario(ScenarioConfig(n_schemas=6, versions_per_schema=3, seed=7))
     coord = StateCoordinator(sc.registry, sc.dpm)
+    engine, mesh = "fused", None
     if shards > 1:
         from repro.launch.mesh import make_etl_mesh
 
-        app = METLApp(coord, engine="sharded", mesh=make_etl_mesh(shards))
+        engine, mesh = "sharded", make_etl_mesh(shards)
+    sink = TokenizerSink(vocab, max_len=max_len, limit=n_requests)
+    stream = EventSource(sc.registry, seed=7)
+    if instances > 1:
+        # columnar chunks, sliced round-robin over the instances; lockstep
+        # rounds keep every instance at the same state i (paper SS5.5)
+        cluster = Cluster.over_stream(
+            coord, stream, instances=instances, chunk_size=256,
+            sinks=[sink], engine=engine, mesh=mesh,
+            async_consume=async_consume,
+        )
+        # pull until the bounded sink gates the stream; a whole window of
+        # rounds with zero canonical rows means the stream is unmappable --
+        # bail out instead of spinning on an unbounded source forever
+        total = 0
+        while not sink.full():
+            st = cluster.run(max_rounds=16 * instances)
+            total += st.rows
+            if st.rows == 0:
+                raise RuntimeError(
+                    f"ETL cluster produced no canonical rows in {st.events} "
+                    f"events this window"
+                )
+        info = cluster.info()
+        print(
+            f"etl: cluster of {info['instances']} instances "
+            f"(engine={info['engine']}, state i={info['state']}, "
+            f"per-instance states {info['states']}): {info['events']} events "
+            f"-> {total} canonical rows in {info['dispatches']} dispatches"
+            f"{', async double-buffered' if async_consume else ''}"
+        )
+        return sink.prompts
+    app = METLApp(coord, engine=engine, mesh=mesh)
+    if shards > 1:
         info = app.engine.info()
         print(
             f"etl: sharded engine over {info['n_shards']} shards, "
             f"{info['table_bytes_per_shard']} table bytes/shard "
             f"({info['n_blocks']} blocks, {info['blocks_per_shard']}/shard)"
         )
-    else:
-        app = METLApp(coord, engine="fused")
-    sink = TokenizerSink(vocab, max_len=max_len, limit=n_requests)
     # columnar=True (the default): payloads flatten to (uid, value) arrays
     # once at the source boundary; consume densifies in pure numpy
-    source = EventChunkSource(
-        EventSource(sc.registry, seed=7), chunk_size=256, columnar=True
-    )
+    source = EventChunkSource(stream, chunk_size=256, columnar=True)
     pipe = Pipeline(source, app, [sink], async_consume=async_consume)
     # pull until serving has enough prompts; a whole 16-chunk window with
     # zero canonical rows means the stream is unmappable -- bail out
@@ -108,6 +152,11 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=0,
                     help="with --etl: shard the DMM block table over a 1xN "
                          "mesh data axis (engine='sharded'); 0/1 = replicated")
+    ap.add_argument("--instances", type=int, default=0,
+                    help="with --etl: fan the stream over N horizontally-"
+                         "scaled METL instances (a Cluster with one "
+                         "coordinator as the single state writer); 0/1 = "
+                         "one pipeline")
     ap.add_argument("--async-consume", action="store_true",
                     help="with --etl: double-buffered pipeline consume "
                          "(chunk N+1 densifies while chunk N is on device)")
@@ -139,7 +188,7 @@ def main() -> None:
     if args.etl:
         prompts = _etl_prompts(
             args.requests, cfg.vocab, shards=args.shards,
-            async_consume=args.async_consume,
+            async_consume=args.async_consume, instances=args.instances,
         )
     else:
         rng = np.random.default_rng(0)

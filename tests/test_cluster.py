@@ -1,0 +1,186 @@
+"""The multi-instance Cluster runtime (paper SS5.5 horizontal scaling).
+
+Covers the acceptance surface of the cluster half of the control-plane
+tentpole:
+  * a 4-instance Cluster over deterministic sliced sources emits exactly
+    the single-instance row sequence under a mid-stream SchemaEvolved,
+    with fused dispatches/chunk still at 1 per instance;
+  * one coordinator as the single state writer: the in-band control event
+    is applied exactly once and every instance lands on the same state i;
+  * lockstep resume under shared-sink backpressure loses no chunks;
+  * aggregated cluster.info() over per-instance engine.info();
+  * cross-instance dead-letter replay through the reset_offset() contract.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.state import StateCoordinator
+from repro.core.synthetic import ScenarioConfig, build_scenario
+from repro.etl import (
+    Cluster,
+    CollectSink,
+    EventChunkSource,
+    EventSource,
+    METLApp,
+    Pipeline,
+    SchemaEvolved,
+)
+
+
+def _world(seed=91):
+    sc = build_scenario(ScenarioConfig(seed=seed))
+    return sc, StateCoordinator(sc.registry, sc.dpm)
+
+
+def _evolve_event(reg, which=0, tag="evo"):
+    o = reg.domain.schema_ids()[which]
+    v = reg.domain.latest_version(o)
+    keep = tuple(a.name for a in reg.domain.get(o, v).attributes)[1:]
+    return SchemaEvolved(tree="domain", schema_id=o, keep=keep, add=(tag,))
+
+
+def _assert_rows_equal(a, b):
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        assert x[0] == y[0] and x[3] == y[3]
+        np.testing.assert_array_equal(x[1], y[1])
+        np.testing.assert_array_equal(x[2], y[2])
+
+
+def _single_instance_rows(seed, n_chunks, size, boundary, async_consume=False):
+    sc, coord = _world(seed)
+    app = METLApp(coord)
+    ev = _evolve_event(coord.registry)
+    sink = CollectSink()
+    Pipeline(
+        EventChunkSource(EventSource(sc.registry, seed=7), chunk_size=size,
+                         max_chunks=n_chunks, control={boundary: ev}),
+        app, [sink], async_consume=async_consume,
+    ).run()
+    return sink.rows, app
+
+
+@pytest.mark.parametrize("async_consume", [False, True])
+def test_cluster_matches_single_instance_under_evolution(async_consume):
+    """The acceptance criterion: 4 instances over sliced sources == one
+    instance over the unsliced stream, row for row, across a mid-stream
+    evolution, at 1 fused dispatch/chunk/instance."""
+    n_chunks, size, boundary = 8, 64, 4
+    rows_single, app_single = _single_instance_rows(
+        91, n_chunks, size, boundary, async_consume
+    )
+    assert len(rows_single) > 0
+
+    sc, coord = _world(91)
+    ev = _evolve_event(coord.registry)
+    sink = CollectSink()
+    cluster = Cluster.over_stream(
+        coord, EventSource(sc.registry, seed=7), instances=4,
+        chunk_size=size, max_chunks=n_chunks, control={boundary: ev},
+        sinks=[sink], async_consume=async_consume,
+    )
+    st = cluster.run()
+    assert st.chunks == n_chunks and st.control == 1
+    _assert_rows_equal(rows_single, sink.rows)
+    # the single writer applied the evolution exactly once
+    assert len(coord.control_log) == 1
+    assert coord.registry.state == app_single.coordinator.registry.state
+    # per-instance: every chunk mapped in ONE fused dispatch, stats add up
+    for k, app in enumerate(cluster.apps):
+        own = len(range(k, n_chunks, 4))
+        assert app.stats["dispatches"] == own, k
+    assert sum(a.stats["events"] for a in cluster.apps) == app_single.stats["events"]
+    assert sum(a.stats["mapped"] for a in cluster.apps) == app_single.stats["mapped"]
+
+
+def test_cluster_info_aggregates_instances():
+    sc, coord = _world(92)
+    sink = CollectSink()
+    cluster = Cluster.over_stream(
+        coord, EventSource(sc.registry, seed=7), instances=3,
+        chunk_size=32, max_chunks=6, sinks=[sink],
+    )
+    cluster.run()
+    info = cluster.info()
+    assert info["instances"] == 3 and info["engine"] == "fused"
+    assert info["state"] == coord.registry.state
+    assert info["states"] == [coord.registry.state]  # all instances agree
+    assert info["dispatches"] == sum(
+        i["dispatches"] for i in info["per_instance"]
+    ) == 6
+    assert info["events"] == 6 * 32
+    assert info["dead_letter"] == 0
+    assert len(info["per_instance"]) == 3
+
+
+def test_cluster_backpressure_resume_loses_nothing():
+    """A full shared sink stops the lockstep; draining it and re-running
+    completes the stream with the single-instance row sequence."""
+    n_chunks, size = 6, 50
+    rows_single, _ = _single_instance_rows(93, n_chunks, size, boundary=3)
+
+    sc, coord = _world(93)
+    ev = _evolve_event(coord.registry)
+    sink = CollectSink(limit=60)  # trips mid-stream
+    cluster = Cluster.over_stream(
+        coord, EventSource(sc.registry, seed=7), instances=2,
+        chunk_size=size, max_chunks=n_chunks, control={3: ev}, sinks=[sink],
+    )
+    st1 = cluster.run()
+    assert sink.full() and st1.chunks < n_chunks
+    sink.limit = None
+    st2 = cluster.run()
+    assert st1.chunks + st2.chunks == n_chunks
+    _assert_rows_equal(rows_single, sink.rows)
+
+
+def test_cluster_cross_instance_dead_letter_replay():
+    """A broken producer stamps every event with the previous state, so all
+    of them dead-letter on their instances (the semi-automated error path).
+    Once the producer is fixed, replay_dead_letters routes each rewind
+    position to the OWNING instance's source through the reset_offset()
+    contract; the re-sliced events carry the current state and map."""
+    sc, coord = _world(94)
+    sink = CollectSink()
+    stream = EventSource(sc.registry, seed=7, p_stale=1.0, p_duplicate=0.0)
+    cluster = Cluster.over_stream(
+        coord, stream, instances=2, chunk_size=32, max_chunks=4, sinks=[sink],
+    )
+    st = cluster.run()
+    assert st.chunks == 4 and len(sink.rows) == 0
+    assert sum(len(a.dead_letter) for a in cluster.apps) == 4 * 32
+    assert cluster.info()["dead_letter"] == 4 * 32
+
+    stream.p_stale = 0.0  # the producer is fixed; offsets can be set back
+    rep = cluster.replay_dead_letters()
+    assert rep.chunks == 4  # every chunk re-delivered by its owner
+    assert sum(len(a.dead_letter) for a in cluster.apps) == 0
+    assert len(sink.rows) > 0  # re-sliced in-state: they map now
+    # replay is deterministic: the same rows a fresh single instance maps
+    # from the fixed stream (lockstep replay preserves global chunk order)
+    sc2, coord2 = _world(94)
+    app2 = METLApp(coord2)
+    src2 = EventSource(sc2.registry, seed=7, p_duplicate=0.0)
+    rows2 = [r for k in range(4) for r in app2.consume(src2.slice_columnar(k * 32, 32))]
+    _assert_rows_equal(rows2, sink.rows)
+
+
+def test_cluster_replay_requires_grid():
+    sc, coord = _world(95)
+    src = EventChunkSource(EventSource(sc.registry, seed=7), chunk_size=32,
+                           max_chunks=2)
+    cluster = Cluster(coord, [src], [CollectSink()])
+    cluster.run()
+    with pytest.raises(RuntimeError):
+        cluster.replay_dead_letters()
+
+
+def test_cluster_rejects_shared_engine_instance():
+    sc, coord = _world(96)
+    from repro.etl import FusedEngine
+
+    srcs = [EventChunkSource(EventSource(sc.registry, seed=7), chunk_size=32,
+                             max_chunks=1, stride=2, offset=k) for k in range(2)]
+    with pytest.raises(ValueError):
+        Cluster(coord, srcs, [CollectSink()], engine=FusedEngine())

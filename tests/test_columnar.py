@@ -327,7 +327,7 @@ def test_dead_letter_replay_through_source_reset():
     src = EventSource(sc.registry, seed=11, p_duplicate=0.0)
     app = METLApp(coord, engine="fused")
     stale = src.slice(64, 32)  # generated at the current state...
-    coord.registry._bump()  # ...which the registry then leaves behind
+    coord.registry.bump_state()  # ...which the registry then leaves behind
     app.refresh()
     assert app.consume(stale) == []
     assert app.stats["dead_lettered"] == 32

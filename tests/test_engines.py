@@ -179,7 +179,7 @@ def test_dense_chunk_pins_its_plan():
     groups = app.triage(list(events))
     dense = app.engine.densify(groups)
     old_plan = dense.plan
-    coord.registry._bump()
+    coord.registry.bump_state()
     app.refresh()  # recompiles the engine plan
     assert app.engine.plan is not old_plan
     assert dense.plan is old_plan  # the chunk still carries its own plan

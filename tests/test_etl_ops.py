@@ -87,7 +87,7 @@ class TestErrorManagement:
         rows0 = app.consume(evs)
         assert app.stats["parked"] == 4
         # the registry moves on; bring the app up and replay
-        coord.registry._bump()
+        coord.registry.bump_state()
         replayed = app.refresh()
         assert app.stats["replayed"] == 4
         assert not app._parked
@@ -118,7 +118,7 @@ class TestErrorManagement:
         app.consume(evs)
         assert app.stats["events"] == 10
         assert app.stats["parked"] == 4
-        coord.registry._bump()
+        coord.registry.bump_state()
         app.refresh()  # replays the 4 parked events
         assert app.stats["replayed"] == 4
         assert app.stats["events"] == 10  # NOT 14: replays aren't new events

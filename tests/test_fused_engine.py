@@ -164,7 +164,7 @@ def test_parked_replay_after_state_bump_uses_rebuilt_engine():
     assert app.stats["parked"] == 5
     assert app._fused is not None
     old_state = app._fused.state
-    coord.registry._bump()
+    coord.registry.bump_state()
     replayed = app.refresh()  # rebuilds FusedDMM, replays parked events
     assert app.stats["replayed"] == 5
     assert app._fused.state == old_state + 1

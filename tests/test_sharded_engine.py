@@ -97,7 +97,7 @@ def test_sharded_replay_and_state_bump():
         app.consume(events)
         assert app.stats["parked"] == 5
         old_state = app._sharded.state
-        coord.registry._bump()
+        coord.registry.bump_state()
         replayed = app.refresh()
         assert app.stats["replayed"] == 5
         assert app._sharded.state == old_state + 1
