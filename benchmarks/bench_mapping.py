@@ -38,6 +38,7 @@ Standalone smoke entry point (used by scripts/ci.sh):
 
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
@@ -60,6 +61,61 @@ from common import bench
 # a dispatch-count contract breaks (fused consume or async pipeline above 1
 # dispatch/chunk); __main__ then exits non-zero so the build fails.
 GATE_FAILURES: list = []
+
+# Per-engine per-chunk facts for the ETL roofline + the BENCH_*.json
+# trajectory artifact (benchmarks/run.py --artifact); populated by run().
+# Entry keys: engine, chunk_events, dispatches, host_bytes, device_bytes,
+# events_per_s -- see repro.launch.roofline.analyze_etl.
+ENGINE_METRICS: list = []
+
+# name -> events/s for the perf-trajectory diff (scripts/perf_diff.py);
+# populated by run().
+PERF_METRICS: dict = {}
+
+
+def _dense_host_bytes(dense) -> int:
+    """Host->device operand bytes one dispatch of this dense chunk ships."""
+    from repro.core.dmm_jax import bucket_rows
+    from repro.etl.engines import BlockDense, ColumnarDense
+
+    if isinstance(dense, ColumnarDense):
+        return int(dense.packed.nbytes)  # the single packed transfer
+    if isinstance(dense, BlockDense):
+        return int(sum(v.nbytes + m.nbytes for _, _, v, m in dense.groups))
+    return int(
+        dense.vals.nbytes + dense.mask.nbytes + 2 * bucket_rows(dense.row_ids.size) * 4
+    )
+
+
+def _engine_metric(app: METLApp, chunk, *, label: str, dispatches: int, us: float):
+    """One roofline row: measured per-chunk facts for this engine config."""
+    app.reset_dedup()
+    tri = app.triage(chunk)
+    dense = app.engine.densify(tri)
+    host_bytes = 0 if dense is None else _dense_host_bytes(dense)
+    info = app.engine.info()
+    width = info.get("width", 0)
+    if dense is not None and hasattr(dense, "groups"):
+        # per-block engine: outputs at each block's padded width
+        out_bytes = 0
+        for (o, v), keys, vals, mask in dense.groups:
+            for block in app.engine.plan.column(o, v):
+                out_bytes += int(keys.size) * int(block.src.size) * 5
+    else:
+        out_rows = 0 if dense is None else int(dense.row_ids.size)
+        out_bytes = out_rows * int(width) * 5  # f32 values + i8 mask
+    n_events = len(chunk)
+    entry = {
+        "engine": label,
+        "chunk_events": n_events,
+        "dispatches": int(dispatches),
+        "host_bytes": int(host_bytes),
+        # bytes the device work touches: operands in, table, outputs out
+        "device_bytes": int(host_bytes + info.get("table_bytes", 0) + out_bytes),
+        "events_per_s": n_events / (us / 1e6),
+    }
+    ENGINE_METRICS.append(entry)
+    return entry
 
 
 def _consume_bench(app: METLApp, events, *, warmup: int = 1, iters: int = 5):
@@ -120,6 +176,35 @@ def sharded_worker(shards: int, smoke: bool) -> list:
         f"(total/{shards} = {total_bytes / shards:.0f}; "
         f"{info['blocks_per_shard']}/{info['n_blocks']} blocks per shard)",
     ))
+
+    # sharded device densify: same mesh, packed columnar transfer; must be
+    # bit-exact with the replicated host-densify rows
+    app_shd = METLApp(coord, engine="sharded", mesh=mesh, device_densify=True)
+    us_shd, disp_d = _consume_bench(app_shd, events, iters=iters)
+    app_rep.reset_dedup()
+    app_shd.reset_dedup()
+    rows_rep, rows_shd = app_rep.consume(events), app_shd.consume(events)
+    sh_exact = len(rows_rep) == len(rows_shd) and all(
+        a[0] == b[0] and a[3] == b[3]
+        and np.array_equal(a[1], b[1]) and np.array_equal(a[2], b[2])
+        for a, b in zip(rows_rep, rows_shd)
+    )
+    rows.append((
+        f"mapping/metl_consume_sharded_devdensify_{shards}sh_{n_events}ev",
+        us_shd,
+        f"{n_events / (us_shd / 1e6):.0f} events/s, {disp_d} dispatch/chunk, "
+        f"{us_sh / us_shd:.2f}x vs sharded host densify, bit_exact={sh_exact}",
+    ))
+    if not sh_exact:
+        GATE_FAILURES.append(
+            f"sharded device densify ({shards} shards) diverged from the "
+            f"replicated host oracle"
+        )
+    chunk_m = EventSource(sc.registry, seed=1).slice_columnar(0, n_events)
+    _engine_metric(app_sh, chunk_m, label=f"sharded-{shards}sh-host",
+                   dispatches=disp, us=us_sh)
+    _engine_metric(app_shd, chunk_m, label=f"sharded-{shards}sh-device",
+                   dispatches=disp_d, us=us_shd)
     return rows
 
 
@@ -138,6 +223,15 @@ def _sharded_ab(shards: int, smoke: bool) -> list:
         raise RuntimeError(f"sharded worker failed:\n{r.stdout}\n{r.stderr[-2000:]}")
     rows = []
     for line in r.stdout.strip().splitlines():
+        # the worker streams three record kinds: roofline metric entries and
+        # gate failures (re-raised into this process) ride as prefixed JSON
+        # sidecars of the plain CSV rows
+        if line.startswith("metric:"):
+            ENGINE_METRICS.append(json.loads(line[len("metric:"):]))
+            continue
+        if line.startswith("gate:"):
+            GATE_FAILURES.append(json.loads(line[len("gate:"):]))
+            continue
         name, us, derived = line.split(",", 2)
         rows.append((name, float(us), derived))
     return rows
@@ -185,6 +279,7 @@ def run(smoke: bool = False) -> list:
         us_blocks,
         f"{n_events / (us_blocks / 1e6):.0f} events/s, {disp_blocks} dispatches/chunk",
     ))
+    PERF_METRICS["consume_perblock"] = n_events / (us_blocks / 1e6)
 
     app_fused = METLApp(coord, engine="fused")
     us_fused, disp_fused = _consume_bench(app_fused, events, iters=iters)
@@ -194,6 +289,7 @@ def run(smoke: bool = False) -> list:
         f"{n_events / (us_fused / 1e6):.0f} events/s, {disp_fused} dispatch/chunk, "
         f"{us_blocks / us_fused:.1f}x vs per-block",
     ))
+    PERF_METRICS["consume_fused"] = n_events / (us_fused / 1e6)
     if disp_fused > 1:
         GATE_FAILURES.append(
             f"fused engine regressed to {disp_fused} dispatches/chunk (want <= 1)"
@@ -246,6 +342,67 @@ def run(smoke: bool = False) -> list:
             f"({us_col:.0f} us vs {us_dict:.0f} us)"
         )
 
+    # -- device-densify A/B: host scatter vs on-device densification ----------
+    # The PR-6 tentpole: the same chunk consumed through (a) the host numpy
+    # scatter + dense-payload transfer and (b) the packed columnar transfer
+    # + on-device densify_map (one buffer, one dispatch).  Gates: bit-exact
+    # rows, <= 1 dispatch AND exactly 1 host->device transfer per chunk, and
+    # (full mode) the device path must not be slower end-to-end.  On CPU
+    # there is no PCIe boundary, so the measured ratio understates the
+    # accelerator win -- the roofline model (repro.launch.roofline --etl)
+    # prices the transfer term where the 2x comes from; here the packed
+    # buffer is ~12x smaller than the dense payload it replaces.
+    chunk_dd = src.slice_columnar(70_000, n_events)
+    app_hd = METLApp(coord, engine="fused")
+    app_dd = METLApp(coord, engine="fused", device_densify=True)
+    us_hd, disp_hd = _consume_bench(app_hd, chunk_dd, iters=den_iters)
+    us_dd, disp_dd = _consume_bench(app_dd, chunk_dd, iters=den_iters)
+    app_hd.reset_dedup()
+    app_dd.reset_dedup()
+    rows_h = app_hd.consume(chunk_dd)
+    t_before, d_before = app_dd.stats["transfers"], app_dd.stats["dispatches"]
+    rows_d = app_dd.consume(chunk_dd)
+    transfers_dd = app_dd.stats["transfers"] - t_before
+    dd_exact = len(rows_h) == len(rows_d) and all(
+        a[0] == b[0] and a[3] == b[3]
+        and np.array_equal(a[1], b[1]) and np.array_equal(a[2], b[2])
+        for a, b in zip(rows_h, rows_d)
+    )
+    m_host = _engine_metric(app_hd, chunk_dd, label="fused-host-densify",
+                            dispatches=disp_hd, us=us_hd)
+    m_dev = _engine_metric(app_dd, chunk_dd, label="fused-device-densify",
+                           dispatches=disp_dd, us=us_dd)
+    _engine_metric(app_blocks, chunk_dd, label="per-block",
+                   dispatches=disp_blocks, us=us_blocks)
+    rows.append((
+        f"mapping/metl_consume_devdensify_{n_events}ev",
+        us_dd,
+        f"{n_events / (us_dd / 1e6):.0f} events/s, {disp_dd} dispatch + "
+        f"{transfers_dd} transfer/chunk ({m_dev['host_bytes']} B packed vs "
+        f"{m_host['host_bytes']} B dense, "
+        f"{m_host['host_bytes'] / max(1, m_dev['host_bytes']):.1f}x less PCIe), "
+        f"{us_hd / us_dd:.2f}x vs host densify ({us_hd:.0f} us), "
+        f"bit_exact={dd_exact}",
+    ))
+    PERF_METRICS["consume_fused_host"] = n_events / (us_hd / 1e6)
+    PERF_METRICS["consume_fused_device"] = n_events / (us_dd / 1e6)
+    if not dd_exact:
+        GATE_FAILURES.append("device densify diverged from the host oracle")
+    if disp_dd > 1:
+        GATE_FAILURES.append(
+            f"device densify issued {disp_dd} dispatches/chunk (want <= 1)"
+        )
+    if transfers_dd != 1:
+        GATE_FAILURES.append(
+            f"device densify made {transfers_dd} host->device transfers/chunk "
+            f"(want exactly 1 packed buffer)"
+        )
+    if not smoke and us_dd > us_hd:
+        GATE_FAILURES.append(
+            f"device densify slower than host densify end-to-end at "
+            f"{n_events} events ({us_dd:.0f} us vs {us_hd:.0f} us)"
+        )
+
     # -- streaming pipeline: sync vs double-buffered async consume ------------
     # Same chunks, same app config; the A/B isolates the overlap of chunk
     # N+1's host-side densification with chunk N's device dispatch.  Chunks
@@ -256,11 +413,13 @@ def run(smoke: bool = False) -> list:
     chunks = [src.slice_columnar(50_000 + k * n_events, n_events) for k in range(n_chunks)]
     total_ev = n_chunks * n_events
     app_pipe = METLApp(coord, engine="fused")
+    app_pipe_dd = METLApp(coord, engine="fused", device_densify=True)
 
-    def pipe_run(async_consume, densify_thread=False):
-        app_pipe.reset_dedup()
+    def pipe_run(async_consume, densify_thread=False, app=None):
+        app = app or app_pipe
+        app.reset_dedup()
         sink = CollectSink()
-        pipe = Pipeline(ListSource(chunks), app_pipe, [sink],
+        pipe = Pipeline(ListSource(chunks), app, [sink],
                         async_consume=async_consume, densify_thread=densify_thread)
         pipe.run()
         if densify_thread:
@@ -298,6 +457,32 @@ def run(smoke: bool = False) -> list:
         f"{total_ev / (us_pthread / 1e6):.0f} events/s, "
         f"{us_psync / us_pthread:.2f}x vs sync (dict walk measured 0.6-0.8x)",
     ))
+    PERF_METRICS["pipeline_sync"] = total_ev / (us_psync / 1e6)
+    PERF_METRICS["pipeline_async"] = total_ev / (us_pasync / 1e6)
+    # the tentpole end state: double-buffered async consume with NO host
+    # per-chunk scatter -- the overlapped host work is triage + routing +
+    # the int32 pack; rows must stay identical to the host-densify pipeline
+    us_pdd = bench(lambda: pipe_run(True, app=app_pipe_dd),
+                   warmup=2, iters=pipe_iters)
+    rows_pipe_h = pipe_run(True)
+    rows_pipe_d = pipe_run(True, app=app_pipe_dd)
+    pipe_exact = len(rows_pipe_h) == len(rows_pipe_d) and all(
+        a[0] == b[0] and a[3] == b[3]
+        and np.array_equal(a[1], b[1]) and np.array_equal(a[2], b[2])
+        for a, b in zip(rows_pipe_h, rows_pipe_d)
+    )
+    rows.append((
+        f"mapping/pipeline_async_devdensify_{n_chunks}x{n_events}ev",
+        us_pdd,
+        f"{total_ev / (us_pdd / 1e6):.0f} events/s, "
+        f"{us_pasync / us_pdd:.2f}x vs async host-densify, "
+        f"{us_psync / us_pdd:.2f}x vs sync, bit_exact={pipe_exact}",
+    ))
+    PERF_METRICS["pipeline_async_device"] = total_ev / (us_pdd / 1e6)
+    if not pipe_exact:
+        GATE_FAILURES.append(
+            "async device-densify pipeline diverged from the host-densify pipeline"
+        )
     if disp_async > 1:
         # an unmappable chunk legitimately issues 0 dispatches; only a
         # ratio above 1/chunk is a fused-engine regression
@@ -434,6 +619,10 @@ if __name__ == "__main__":
     if args.sharded_worker:
         for name, us, derived in sharded_worker(args.sharded_worker, args.smoke):
             print(f"{name},{us:.1f},{derived}", flush=True)
+        for entry in ENGINE_METRICS:
+            print(f"metric:{json.dumps(entry)}", flush=True)
+        for msg in GATE_FAILURES:
+            print(f"gate:{json.dumps(msg)}", flush=True)
         sys.exit(0)
     print("name,us_per_call,derived")
     for name, us, derived in run(smoke=args.smoke):

@@ -23,15 +23,26 @@
 #    determinism check (the script asserts state + DPM bit-exactness);
 # 5. a tiny-shape run of the mapping benchmark so the fused- and
 #    sharded-engine perf paths (kernel, shard_map dispatcher, consume,
-#    sync-vs-async pipeline, columnar densify) can't rot silently even when
-#    no test exercises the timing harness.  bench_mapping itself exits
-#    non-zero -- failing this gate -- if the fused engine's dispatches-per-
-#    chunk regress above 1 (direct consume, async pipeline, or any cluster
-#    instance across the epoch-transition A/B), if the columnar densify is
-#    SLOWER than the legacy dict walk at the bench's default chunk size,
-#    if the two densify paths diverge bit-wise, or if the epoch transition
-#    drops/duplicates rows (in-band vs out-of-band oracle, 4-instance
-#    cluster vs single instance).
+#    sync-vs-async pipeline, columnar + device densify) can't rot silently
+#    even when no test exercises the timing harness.  bench_mapping itself
+#    exits non-zero -- failing this gate -- if the fused engine's
+#    dispatches-per-chunk regress above 1 (direct consume, device densify,
+#    async pipeline, or any cluster instance across the epoch-transition
+#    A/B), if device densify makes more than ONE host->device transfer per
+#    chunk, if the columnar densify is SLOWER than the legacy dict walk at
+#    the bench's default chunk size, if any densify path (columnar, device,
+#    sharded-device, pipelined-device) diverges bit-wise from its host
+#    oracle, or if the epoch transition drops/duplicates rows (in-band vs
+#    out-of-band oracle, 4-instance cluster vs single instance).  The run
+#    goes through benchmarks/run.py --artifact, which writes a
+#    BENCH_<ts>.json trajectory artifact;
+# 6. the perf-trajectory diff: scripts/perf_diff.py compares the fresh
+#    artifact's events/s metrics against the last comparable artifact
+#    checked in under benchmarks/trajectory/ and fails on a >20% drop
+#    (tolerance overridable via PERF_TOL);
+# 7. the ETL roofline over the fresh artifact: every engine configuration
+#    (per-block, fused host-densify, fused device-densify, sharded both
+#    ways) priced on the transfer/memory/launch walls on one chart.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -65,5 +76,13 @@ python examples/pipeline_stream.py --chunks 4 --prompts 500
 echo "== mid-stream schema evolution (in-band control + log replay) =="
 python examples/schema_evolution.py --steps 4
 
-echo "== benchmark smoke (fused + sharded engine, sync-vs-async pipeline) =="
-python benchmarks/bench_mapping.py --smoke
+echo "== benchmark smoke (fused/sharded engines, device densify, pipeline) =="
+BENCH_DIR="$(mktemp -d)"
+trap 'rm -rf "$BENCH_DIR"' EXIT
+python -m benchmarks.run --only mapping --smoke --artifact "$BENCH_DIR"
+
+echo "== perf trajectory diff (vs benchmarks/trajectory, >20% drop fails) =="
+python scripts/perf_diff.py "$BENCH_DIR" --baseline benchmarks/trajectory
+
+echo "== ETL roofline (engine configs from the smoke artifact) =="
+python -m repro.launch.roofline --etl "$BENCH_DIR"/BENCH_*.json

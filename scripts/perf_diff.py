@@ -1,0 +1,124 @@
+#!/usr/bin/env python
+"""Perf-trajectory gate: diff a fresh benchmark artifact against the last
+checked-in one and fail on regressions.
+
+    PYTHONPATH=src python scripts/perf_diff.py NEW [--baseline DIR] [--tol F]
+
+``NEW`` is a ``BENCH_*.json`` artifact (or a directory, in which case the
+newest artifact inside is used) produced by ``benchmarks/run.py --artifact``.
+The baseline is the newest artifact under ``--baseline`` (default
+``benchmarks/trajectory/``, the checked-in history) whose ``smoke`` flag and
+``backend`` match the new run -- smoke shapes and full shapes are different
+workloads, and CPU vs accelerator numbers are not comparable, so unlike
+artifacts are never diffed against each other.
+
+Every ``perf_metrics`` entry (name -> events/s) present in BOTH artifacts is
+compared; a drop of more than ``--tol`` (default 0.20, overridable via the
+``PERF_TOL`` env var) fails the gate.  Smoke artifacts gate at a widened
+``max(tol, 0.45)``: tiny-shape medians (64-event chunks, ~10ms pipeline
+passes) jitter 25-40% run-to-run from CPU frequency scaling alone, so the
+full-shape 20% envelope would fail on pure noise -- the tight contract
+belongs to the full-shape trajectory.  Metrics present on only one side are
+reported but never fail (benchmarks grow over time).  With no comparable
+baseline the gate passes trivially -- the first artifact checked in for a
+given (smoke, backend) pair seeds the trajectory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _resolve_new(path: str) -> str:
+    if os.path.isdir(path):
+        arts = sorted(glob.glob(os.path.join(path, "BENCH_*.json")))
+        if not arts:
+            sys.exit(f"perf_diff: no BENCH_*.json under {path}")
+        return arts[-1]
+    return path
+
+
+def _find_baseline(dir_: str, new_path: str, new: dict):
+    """Newest artifact in dir_ comparable to `new` (same smoke flag and
+    backend), excluding `new` itself when it lives in the same directory."""
+    best = None
+    for fn in sorted(glob.glob(os.path.join(dir_, "BENCH_*.json"))):
+        if os.path.abspath(fn) == os.path.abspath(new_path):
+            continue
+        art = _load(fn)
+        if bool(art.get("smoke")) != bool(new.get("smoke")):
+            continue
+        if art.get("backend") != new.get("backend"):
+            continue
+        best = (fn, art)  # sorted ascending: last comparable wins
+    return best
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="fresh BENCH_*.json artifact (or a directory)")
+    ap.add_argument("--baseline", default="benchmarks/trajectory",
+                    help="checked-in trajectory directory")
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("PERF_TOL", "0.20")),
+                    help="max tolerated fractional events/s drop")
+    args = ap.parse_args()
+
+    new_path = _resolve_new(args.new)
+    new = _load(new_path)
+    base = _find_baseline(args.baseline, new_path, new)
+    if base is None:
+        print(
+            f"perf_diff: no comparable baseline in {args.baseline} "
+            f"(smoke={bool(new.get('smoke'))}, backend={new.get('backend')}); "
+            f"trajectory seeds from {os.path.basename(new_path)}"
+        )
+        return
+    base_path, base_art = base
+    old_m = base_art.get("perf_metrics", {})
+    new_m = new.get("perf_metrics", {})
+    tol = max(args.tol, 0.45) if new.get("smoke") else args.tol
+    print(
+        f"perf_diff: {os.path.basename(new_path)} vs "
+        f"{os.path.basename(base_path)} (tol {tol:.0%}"
+        f"{', smoke-widened' if tol != args.tol else ''})"
+    )
+    regressions = []
+    for name in sorted(set(old_m) | set(new_m)):
+        if name not in old_m:
+            print(f"  NEW      {name}: {new_m[name]:.0f} events/s")
+            continue
+        if name not in new_m:
+            print(f"  DROPPED  {name} (was {old_m[name]:.0f} events/s)")
+            continue
+        old_v, new_v = old_m[name], new_m[name]
+        ratio = new_v / old_v if old_v else float("inf")
+        tag = "ok"
+        if ratio < 1.0 - tol:
+            tag = "REGRESSED"
+            regressions.append((name, old_v, new_v, ratio))
+        print(
+            f"  {tag:9s}{name}: {new_v:.0f} vs {old_v:.0f} events/s "
+            f"({ratio:.2f}x)"
+        )
+    if regressions:
+        for name, old_v, new_v, ratio in regressions:
+            print(
+                f"perf_diff: REGRESSION {name} fell to {ratio:.2f}x of the "
+                f"baseline ({new_v:.0f} vs {old_v:.0f} events/s)",
+                file=sys.stderr,
+            )
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

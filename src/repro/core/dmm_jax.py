@@ -91,6 +91,7 @@ __all__ = [
     "FusedDMM",
     "ShardedFusedDMM",
     "compile_fused_sharded",
+    "global_uid_tables",
 ]
 
 LANE = 128  # TPU vector lane width; last-dim tiles must be multiples of this
@@ -296,9 +297,48 @@ class FusedDMM:
     columns: Dict[Tuple[int, int], FusedColumn]
     uid_slot: np.ndarray  # int32 (max_uid+1,): uid -> payload slot, -1 = none
     uid_col: np.ndarray  # int32 (max_uid+1,): uid -> owning col_id, -1 = none
+    # column col_id owns the contiguous global block range
+    # [col_block_start[c], col_block_start[c] + col_block_count[c]) -- block
+    # ids are assigned in column order, so per-column routing vectorises to
+    # two repeats instead of a per-column python loop
+    col_block_start: np.ndarray = None  # int32 (n_cols,)
+    col_block_count: np.ndarray = None  # int32 (n_cols,)
+    # device-resident copies of the uid tables (uploaded once per state) for
+    # the device-densify path (repro.kernels.ops.dmm_apply_columnar)
+    uid_slot_dev: Optional[jax.Array] = None
+    uid_col_dev: Optional[jax.Array] = None
 
     def column(self, o: int, v: int) -> Optional[FusedColumn]:
         return self.columns.get((o, v))
+
+
+def _uid_tables_from(cols) -> Tuple[np.ndarray, np.ndarray]:
+    """Dense global (uid -> payload slot, uid -> owning col_id) tables from
+    ``(uid_pos dict, col_id)`` pairs; -1 marks uids no column knows."""
+    cols = list(cols)
+    max_uid = max((int(u) for pos, _ in cols for u in pos), default=-1)
+    uid_slot = np.full(max_uid + 1, -1, dtype=np.int32)
+    uid_col = np.full(max_uid + 1, -1, dtype=np.int32)
+    for pos, cid in cols:
+        for u, k in pos.items():
+            uid_slot[u] = k
+            uid_col[u] = cid
+    return uid_slot, uid_col
+
+
+def global_uid_tables(
+    compiled: CompiledDMM, registry: Registry
+) -> Tuple[np.ndarray, np.ndarray]:
+    """The fused plan's global uid tables, derivable from any engine's plan.
+
+    Column ids follow ``compiled.by_column`` insertion order -- the same
+    order :func:`_fused_tables` assigns -- so the ``blocks`` engine can
+    account ``stats["unknown_uid"]`` identically to the fused/sharded
+    engines without materialising a fused plan."""
+    return _uid_tables_from(
+        ({u: k for k, u in enumerate(registry.domain.get(o, v).uids)}, cid)
+        for cid, (o, v) in enumerate(compiled.by_column)
+    )
 
 
 def _fused_tables(compiled: CompiledDMM, registry: Registry, lane: int = LANE):
@@ -343,21 +383,24 @@ def _fused_tables(compiled: CompiledDMM, registry: Registry, lane: int = LANE):
     # table resolves any payload uid to (its payload slot, its owning
     # column) in a single gather; the owner check reproduces the legacy
     # per-column lookup semantics for stray/foreign uids
-    max_uid = max(
-        (int(u) for col in columns.values() for u in col.uid_pos), default=-1
+    uid_slot, uid_col = _uid_tables_from(
+        (col.uid_pos, col.col_id) for col in columns.values()
     )
-    uid_slot = np.full(max_uid + 1, -1, dtype=np.int32)
-    uid_col = np.full(max_uid + 1, -1, dtype=np.int32)
-    for col in columns.values():
-        for u, k in col.uid_pos.items():
-            uid_slot[u] = k
-            uid_col[u] = col.col_id
     n_blocks = len(routes)
     n_blocks_pad = max(SUBLANE, -(-max(n_blocks, 1) // SUBLANE) * SUBLANE)
     table = np.full((n_blocks_pad, width), -1, dtype=np.int32)
     if src_rows:
         table[:n_blocks] = np.stack(src_rows)
     n_out_arr = np.asarray(n_out, dtype=np.int32)
+    # block ids are assigned sequentially per column, so each column's
+    # blocks are the contiguous range [start, start + count)
+    col_block_start = np.asarray(
+        [int(c.block_ids[0]) if c.block_ids.size else 0 for c in columns.values()],
+        dtype=np.int32,
+    )
+    col_block_count = np.asarray(
+        [c.block_ids.size for c in columns.values()], dtype=np.int32
+    )
     return (
         table,
         routes,
@@ -368,6 +411,8 @@ def _fused_tables(compiled: CompiledDMM, registry: Registry, lane: int = LANE):
         n_blocks,
         uid_slot,
         uid_col,
+        col_block_start,
+        col_block_count,
     )
 
 
@@ -380,9 +425,8 @@ def compile_fused(
     the next state bump evicts it -- the fused analogue of the paper's
     Caffeine-cached hashmap of column super-sets.
     """
-    table, routes, n_out, columns, n_in_pad, width, n_blocks, uid_slot, uid_col = (
-        _fused_tables(compiled, registry, lane)
-    )
+    (table, routes, n_out, columns, n_in_pad, width, n_blocks, uid_slot,
+     uid_col, cb_start, cb_count) = _fused_tables(compiled, registry, lane)
     return FusedDMM(
         state=compiled.state,
         n_in_pad=n_in_pad,
@@ -394,6 +438,10 @@ def compile_fused(
         columns=columns,
         uid_slot=uid_slot,
         uid_col=uid_col,
+        col_block_start=cb_start,
+        col_block_count=cb_count,
+        uid_slot_dev=jnp.asarray(uid_slot),
+        uid_col_dev=jnp.asarray(uid_col),
     )
 
 
@@ -426,6 +474,10 @@ class ShardedFusedDMM:
     columns: Dict[Tuple[int, int], FusedColumn]
     uid_slot: np.ndarray  # int32 (max_uid+1,): uid -> payload slot, -1 = none
     uid_col: np.ndarray  # int32 (max_uid+1,): uid -> owning col_id, -1 = none
+    col_block_start: np.ndarray = None  # int32 (n_cols,): see FusedDMM
+    col_block_count: np.ndarray = None  # int32 (n_cols,)
+    uid_slot_dev: Optional[jax.Array] = None  # device copies (once per state)
+    uid_col_dev: Optional[jax.Array] = None
 
     def column(self, o: int, v: int) -> Optional[FusedColumn]:
         return self.columns.get((o, v))
@@ -475,9 +527,8 @@ def compile_fused_sharded(
         if mesh is None:
             raise ValueError("need a mesh or an explicit n_shards")
         n_shards = mesh.shape[axis]
-    table, routes, n_out, columns, n_in_pad, width, n_blocks, uid_slot, uid_col = (
-        _fused_tables(compiled, registry, lane)
-    )
+    (table, routes, n_out, columns, n_in_pad, width, n_blocks, uid_slot,
+     uid_col, cb_start, cb_count) = _fused_tables(compiled, registry, lane)
     per = -(-max(n_blocks, 1) // n_shards)
     per_pad = max(SUBLANE, -(-per // SUBLANE) * SUBLANE)
     src3d_np = np.full((n_shards, per_pad, width), -1, dtype=np.int32)
@@ -505,4 +556,8 @@ def compile_fused_sharded(
         columns=columns,
         uid_slot=uid_slot,
         uid_col=uid_col,
+        col_block_start=cb_start,
+        col_block_count=cb_count,
+        uid_slot_dev=jnp.asarray(uid_slot),
+        uid_col_dev=jnp.asarray(uid_col),
     )

@@ -90,6 +90,7 @@ class Cluster:
         engine: Any = "fused",
         mesh=None,
         impl: str = "ref",
+        device_densify: bool = False,
         async_consume: bool = False,
         strict_state: bool = False,
         grid: Optional[tuple] = None,
@@ -106,7 +107,7 @@ class Cluster:
         self.sinks = list(sinks)
         self.apps = [
             METLApp(coordinator, engine=engine, mesh=mesh, impl=impl,
-                    strict_state=strict_state)
+                    device_densify=device_densify, strict_state=strict_state)
             for _ in self.sources
         ]
         # every instance pipeline shares the sink list (the merge fan-in)

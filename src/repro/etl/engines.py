@@ -57,9 +57,37 @@ Built-in engines:
       masked gather per compacted block per column), kept for A/B
       benchmarking and as the only realisation of ``impl="onehot"``.
 
+With ``device_densify=True`` (fused and sharded) densification itself moves
+on-device: densify shrinks to routing + packing the raw columnar (uid,
+value) items into ONE flat int32 buffer (:class:`ColumnarDense`), and the
+single dispatch resolves uids, densifies, and maps in one fused program
+(:func:`repro.kernels.ops.dmm_apply_columnar` over the plan-global
+``uid_slot`` / ``uid_col`` tables + the fused block table).  No host
+scatter, no mostly-zero dense payload on the PCIe link -- the host path
+stays as the bit-exactness oracle and the small-chunk fallback
+(``min_device_events``).
+
+Where each configuration sits, measured per 512-event chunk (full-shape
+``benchmarks/bench_mapping.py``; roofline = ``repro.launch.roofline --etl``
+over the checked-in ``benchmarks/trajectory/BENCH_*.json``):
+
+    engine                 disp/chunk  host B/chunk  roofline position
+    blocks (per-block)         274        19,550     launch-bound (274 x ~6us)
+    fused, host densify          1       331,776     transfer-bound (20.7us PCIe)
+    fused, device densify        1        43,008     launch-bound (~6us)
+    sharded, host densify        1       331,776     transfer-bound
+    sharded, device densify      1        43,008     launch-bound
+
+The device-densify packed buffer is ~7.7x smaller than the dense payload it
+replaces, which moves the wall off the PCIe link: the roofline events/s
+ceiling rises 3.5x (2.5e7 -> 8.5e7 at 512-event chunks), and even on CPU
+(no PCIe boundary, the scatter just moves between equally-fast paths) the
+measured end-to-end consume is 1.4x faster.
+
 ``info()`` is the public observability surface (engine name, shard count,
-block count, device-resident table bytes, cumulative dispatches) -- callers
-must use it instead of reaching into private engine state.
+block count, device-resident table bytes, cumulative dispatches/transfers,
+``device_densify``) -- callers must use it instead of reaching into private
+engine state.
 """
 
 from __future__ import annotations
@@ -79,11 +107,18 @@ from ..core.dmm_jax import (
     compile_dpm,
     compile_fused,
     compile_fused_sharded,
+    global_uid_tables,
     uid_lookup_table,
 )
 from ..core.registry import Registry
 from ..core.state import SystemState
-from ..kernels.ops import dmm_apply, dmm_apply_fused, dmm_apply_sharded
+from ..kernels.ops import (
+    dmm_apply,
+    dmm_apply_columnar,
+    dmm_apply_columnar_sharded,
+    dmm_apply_fused,
+    dmm_apply_sharded,
+)
 from .events import CDCEvent, ColumnarChunk, columnarize
 
 __all__ = [
@@ -93,6 +128,7 @@ __all__ = [
     "as_triaged",
     "densify_chunk_dicts",
     "DenseChunk",
+    "ColumnarDense",
     "DispatchHandle",
     "MappingEngine",
     "FusedEngine",
@@ -205,12 +241,37 @@ def _event_items(chunk: ColumnarChunk, idx: np.ndarray):
 
 def _uid_slots(lut: np.ndarray, uids: np.ndarray) -> np.ndarray:
     """Bounds-checked dense-table lookup: uid -> payload slot, -1 = foreign
-    uid (the vectorised twin of the legacy ``uid_pos.get(uid)``)."""
+    uid (the vectorised twin of the legacy ``uid_pos.get(uid)``).
+
+    Out-of-range uids (negative, or beyond the table -- e.g. an event
+    racing ahead of a schema evolution) are clamped to -1, never
+    index-errors; :func:`_count_unknown_uids` accounts them under
+    ``stats["unknown_uid"]`` identically across engines."""
     if lut.size == 0:
         return np.full(uids.shape, -1, dtype=np.int32)
     valid = (uids >= 0) & (uids < lut.size)
     slots = lut[np.where(valid, uids, 0)]
     return np.where(valid, slots, np.int32(-1))
+
+
+def _count_unknown_uids(uid_col: np.ndarray, chunk, by_column, stats) -> None:
+    """Count payload items whose uid NO column of the current plan knows.
+
+    Covers uids beyond the plan's dense-table range (an event racing ahead
+    of a schema evolution) and in-range holes (e.g. a deleted version's
+    attributes).  Counted over ALL triaged events against the plan-GLOBAL
+    uid -> owning-column table, so every engine -- fused, sharded, blocks,
+    with or without device densify -- reports the identical
+    ``stats["unknown_uid"]``.  The items themselves are clamped out of the
+    scatter (host) / compare-accumulate (device); they never crash."""
+    if not by_column:
+        return
+    idx = np.concatenate(list(by_column.values()))
+    _, item_idx = _event_items(chunk, idx)
+    if item_idx.size:
+        n = int((_uid_slots(uid_col, chunk.uids[item_idx]) < 0).sum())
+        if n:
+            stats["unknown_uid"] += n
 
 
 @dataclasses.dataclass
@@ -244,6 +305,42 @@ class DenseChunk:
 
 
 @dataclasses.dataclass
+class ColumnarDense:
+    """A chunk densified ON DEVICE: the raw columnar operands packed into
+    one flat int32 buffer, so the whole chunk crosses the host->device
+    boundary in a single transfer and densification happens inside the one
+    fused dispatch (:func:`repro.kernels.ops.dmm_apply_columnar`).
+
+    ``packed`` layout (section sizes are the bucketed statics below):
+
+        [ uids(NI) | val_bits(NI) | starts(B) | counts(B) | ev_col(B)
+          | rows | blks ]
+
+    where ``rows``/``blks`` are the (S,) routing (replicated) or the
+    flattened (n_shards, S_loc) per-shard pair (sharded).  ``row_ids`` /
+    ``blk_ids`` / ``out_keys`` keep the HOST copy of the global routing for
+    emit, which is unchanged from the host-densified path.  Same epoch pin
+    as :class:`DenseChunk`.
+    """
+
+    plan: Any
+    packed: np.ndarray  # flat int32 operand buffer (one transfer per chunk)
+    n_items: int  # NI: bucketed item-column length
+    n_events: int  # B: bucketed selected-event count
+    n_rows: int  # S: bucketed routing length (per shard when sharded)
+    k: int  # bucketed max items per selected event
+    row_ids: np.ndarray  # host routing for emit, global order
+    blk_ids: np.ndarray
+    out_keys: np.ndarray
+    shard_sel: Optional[List[np.ndarray]] = None
+    n_shards: int = 1
+
+    @property
+    def epoch(self) -> Optional[int]:
+        return getattr(self.plan, "state", None)
+
+
+@dataclasses.dataclass
 class DispatchHandle:
     """An in-flight device dispatch.
 
@@ -257,27 +354,39 @@ class DispatchHandle:
     dense: Any
 
 
-def _densify_chunk(plan, groups) -> Optional[DenseChunk]:
-    """Chunk densification shared by the fused and sharded engines.
+@dataclasses.dataclass
+class _ChunkLayout:
+    """Selection + routing of one triaged chunk against one plan -- the
+    engine-agnostic prefix shared by the host-scatter and device-densify
+    paths.  ``sel`` is the dense-row order (every mappable column's events,
+    column by column); ``row_ids``/``blk_ids``/``out_keys`` are the legacy
+    emission-order routing."""
 
-    Pure numpy over the columnar chunk, with NO per-column array work: the
-    selected events of every column are concatenated into one dense-row
-    order, their payload items gathered in one CSR pass
-    (:func:`_event_items`), uids resolved through the plan's GLOBAL
-    uid -> (slot, owning column) tables in one gather each (uids are
-    globally unique, so the owner comparison reproduces the legacy
-    per-column ``uid_pos.get`` semantics for stray uids), and the
-    (row, block) routing built by segmented aranges in legacy emission
-    order (per column, per block, per event).  Bit-exact with the dict walk
-    (:func:`densify_chunk_dicts`); returns None for an unmappable chunk
-    (zero dispatches).
+    chunk: ColumnarChunk
+    sel: np.ndarray  # (B,) i64: chunk event index per dense row
+    ev_counts: np.ndarray  # (n_cols,) i64: dense rows per column
+    col_ids: np.ndarray  # (n_cols,) i32: plan col_id per column
+    row_ids: np.ndarray  # (S,) i32
+    blk_ids: np.ndarray  # (S,) i32
+    out_keys: np.ndarray  # (S,) i64
+
+
+def _chunk_layout(plan, tri: TriagedChunk, stats=None) -> Optional[_ChunkLayout]:
+    """Build the dense-row selection and (row, block) routing for a chunk.
+
+    Fully vectorised: per-column work is two dict lookups (the (o, v) ->
+    FusedColumn resolution); the routing itself comes from the plan's
+    contiguous per-column block ranges (``col_block_start``/``count``) via
+    segmented aranges in legacy emission order (per column, per block, per
+    event).  Also accounts ``stats["unknown_uid"]`` when ``stats`` is given
+    (over ALL triaged events, mappable or not -- see
+    :func:`_count_unknown_uids`).  Returns None for an unmappable chunk
+    (zero dispatches) -- exactly the legacy behaviour: columns with no
+    mapping paths contribute no output rows.
     """
-    tri = as_triaged(groups)
-    if tri is None:
-        return None
     chunk = tri.chunk
-    # columns with no mapping paths contribute no output rows (exactly the
-    # legacy behaviour: the per-block loop body never runs)
+    if stats is not None:
+        _count_unknown_uids(plan.uid_col, chunk, tri.by_column, stats)
     cols = [
         (col, idx)
         for (o, v), idx in tri.by_column.items()
@@ -289,9 +398,36 @@ def _densify_chunk(plan, groups) -> Optional[DenseChunk]:
     # dense-row order: every column's events, column by column
     sel = np.concatenate([idx for _, idx in cols])
     ev_counts = np.asarray([idx.size for _, idx in cols], dtype=np.int64)
-    n_events = sel.size
+    col_ids = np.asarray([col.col_id for col, _ in cols], dtype=np.int32)
 
-    vals = np.zeros((bucket_rows(n_events), plan.n_in_pad), np.float32)
+    # routing in legacy emission order: block t of a column owning n events
+    # yields the segment arange(base, base + n); each column's blocks are
+    # the contiguous plan range [start, start + count)
+    bstart = plan.col_block_start[col_ids].astype(np.int64)
+    bcount = plan.col_block_count[col_ids].astype(np.int64)
+    seg_starts = np.repeat(_excl_cumsum(ev_counts), bcount)
+    seg_counts = np.repeat(ev_counts, bcount)
+    row_ids, seg_of = _segmented_arange(seg_starts, seg_counts)
+    blk_seq, _ = _segmented_arange(bstart, bcount)
+
+    return _ChunkLayout(
+        chunk=chunk,
+        sel=sel,
+        ev_counts=ev_counts,
+        col_ids=col_ids,
+        row_ids=row_ids.astype(np.int32),
+        blk_ids=blk_seq[seg_of].astype(np.int32),
+        out_keys=chunk.keys[sel][row_ids],
+    )
+
+
+def _densify_host(plan, layout: _ChunkLayout) -> DenseChunk:
+    """Host-side densification of a laid-out chunk: one CSR gather
+    (:func:`_event_items`), one resolve through the plan's global uid
+    tables (the owner comparison reproduces the legacy per-column
+    ``uid_pos.get`` semantics for stray uids), one numpy scatter."""
+    chunk, sel = layout.chunk, layout.sel
+    vals = np.zeros((bucket_rows(sel.size), plan.n_in_pad), np.float32)
     mask = np.zeros_like(vals, dtype=np.int8)
     ev_rows, item_idx = _event_items(chunk, sel)
     if item_idx.size:
@@ -300,32 +436,70 @@ def _densify_chunk(plan, groups) -> Optional[DenseChunk]:
         owner = _uid_slots(plan.uid_col, uids)
         # column id per dense row -> per item; an item scatters only when
         # its uid belongs to THIS event's column (legacy .get semantics)
-        col_ids = np.asarray([col.col_id for col, _ in cols], dtype=np.int32)
-        keep = owner == np.repeat(col_ids, ev_counts)[ev_rows]
+        keep = owner == np.repeat(layout.col_ids, layout.ev_counts)[ev_rows]
         if keep.any():
             r, c = ev_rows[keep], slots[keep]
             vals[r, c] = chunk.vals[item_idx[keep]]
             mask[r, c] = 1
-
-    # routing in legacy emission order -- per column, per block, per event:
-    # block t of a column owning n events yields the segment
-    # arange(base, base + n); all segments realised in one segmented arange
-    blocks = np.concatenate([col.block_ids for col, _ in cols])
-    blocks_per_col = np.asarray(
-        [col.block_ids.size for col, _ in cols], dtype=np.int64
-    )
-    seg_starts = np.repeat(_excl_cumsum(ev_counts), blocks_per_col)
-    seg_counts = np.repeat(ev_counts, blocks_per_col)
-    row_ids, seg_of = _segmented_arange(seg_starts, seg_counts)
-
     return DenseChunk(
         plan=plan,
         vals=vals,
         mask=mask,
-        row_ids=row_ids.astype(np.int32),
-        blk_ids=blocks[seg_of],
-        out_keys=chunk.keys[sel][row_ids],
+        row_ids=layout.row_ids,
+        blk_ids=layout.blk_ids,
+        out_keys=layout.out_keys,
     )
+
+
+def _densify_chunk(plan, groups, stats=None) -> Optional[DenseChunk]:
+    """Chunk densification shared by the fused and sharded engines: the
+    vectorised layout pass (:func:`_chunk_layout`) plus the host numpy
+    scatter (:func:`_densify_host`).  Bit-exact with the dict walk
+    (:func:`densify_chunk_dicts`) and the bit-exactness ORACLE for the
+    device-densify path; returns None for an unmappable chunk."""
+    tri = as_triaged(groups)
+    if tri is None:
+        return None
+    layout = _chunk_layout(plan, tri, stats)
+    if layout is None:
+        return None
+    return _densify_host(plan, layout)
+
+
+def _pack_columnar(layout: _ChunkLayout, rows_flat: np.ndarray, blks_flat: np.ndarray):
+    """Pack one chunk's device-densify operands into ONE flat int32 buffer
+    (the :class:`ColumnarDense` layout).  Sections are bucketed to powers
+    of two so the jit cache sees a handful of static shapes; float values
+    travel as int32 bitcasts (one dtype -> one transfer).  Returns
+    ``(packed, n_items, n_events, k)`` with the bucketed statics."""
+    chunk, sel = layout.chunk, layout.sel
+    offs = chunk.event_offsets
+    starts = offs[sel].astype(np.int32)
+    counts = (offs[sel + 1] - offs[sel]).astype(np.int32)
+    k = bucket_rows(int(counts.max(initial=1)))
+    b = sel.size
+    b_pad = bucket_rows(b)
+    ni = chunk.n_items
+    ni_pad = bucket_rows(ni)
+    ev_col = np.repeat(layout.col_ids, layout.ev_counts)
+    p = np.empty(2 * ni_pad + 3 * b_pad + rows_flat.size + blks_flat.size, np.int32)
+    # uids beyond int32 would silently wrap on the cast and could alias a
+    # real uid on device; they are unknown by definition (the dense table is
+    # int32-indexed), so clamp them to the -1 sentinel like the host path
+    uids = chunk.uids
+    p[:ni] = np.where((uids >= 0) & (uids < np.int64(2**31)), uids, -1)
+    p[ni:ni_pad] = -1  # padded items: unknown uid, never scatters
+    p[ni_pad : ni_pad + ni] = chunk.vals.view(np.int32)
+    p[ni_pad + ni : 2 * ni_pad] = 0
+    o = 2 * ni_pad
+    for arr, fill in ((starts, 0), (counts, 0), (ev_col, -1)):
+        p[o : o + b] = arr
+        p[o + b : o + b_pad] = fill  # padded events: 0 items, no column
+        o += b_pad
+    p[o : o + rows_flat.size] = rows_flat
+    o += rows_flat.size
+    p[o : o + blks_flat.size] = blks_flat
+    return p, ni_pad, b_pad, k
 
 
 def densify_chunk_dicts(plan, groups: Groups) -> Optional[DenseChunk]:
@@ -394,10 +568,13 @@ def _emit_rows(plan, ov, om, blk_ids, out_keys, stats) -> List[CanonicalRow]:
     stats["mapped"] += int(emit.size)
     stats["empty"] += int(blk_ids.size - emit.size)
     routes, n_out = plan.routes, plan.n_out
-    for i in emit:
-        t = int(blk_ids[i])
-        no = int(n_out[t])
-        rows.append((routes[t], ov[i, :no], om[i, :no], int(out_keys[i])))
+    # .tolist() once: the loop body then touches only python ints (numpy
+    # scalar boxing per element is the emit hot-path tax otherwise)
+    widths = n_out[blk_ids[emit]].tolist()
+    for i, t, no, key in zip(
+        emit.tolist(), blk_ids[emit].tolist(), widths, out_keys[emit].tolist()
+    ):
+        rows.append((routes[t], ov[i, :no], om[i, :no], key))
     return rows
 
 
@@ -511,6 +688,7 @@ def make_engine(
     *,
     impl: str = "ref",
     mesh=None,
+    device_densify: bool = False,
     stats: Optional[collections.Counter] = None,
 ) -> MappingEngine:
     """Resolve an engine name (or pass through an instance) to a ready
@@ -522,6 +700,12 @@ def make_engine(
         the ``blocks`` engine rather than silently changing the benched path;
       * ``engine="sharded"`` needs >1 shard on the mesh ``data`` axis;
         otherwise it degenerates to the replicated fused engine.
+
+    ``device_densify=True`` moves chunk densification on-device
+    (:class:`ColumnarDense` / :func:`repro.kernels.ops.dmm_apply_columnar`);
+    only the fused and sharded engines realise it, and ``impl="onehot"``
+    (which routes to the per-block engine) cannot -- both misconfigurations
+    raise instead of silently benching a different path.
     """
     if isinstance(engine, MappingEngine):
         # an instance carries its own impl/mesh; silently overriding (or
@@ -536,6 +720,11 @@ def make_engine(
                 "mesh= conflicts with the engine instance; construct the "
                 "engine with its mesh instead"
             )
+        if device_densify and not getattr(engine, "device_densify", False):
+            raise ValueError(
+                "device_densify=True conflicts with the engine instance; "
+                "construct the engine with device_densify=True instead"
+            )
         if stats is not None:
             engine.stats = stats
         return engine
@@ -544,13 +733,27 @@ def make_engine(
             f"unknown engine {engine!r} (registered: {sorted(ENGINES)})"
         )
     if impl == "onehot" and engine in ("fused", "sharded"):
+        if device_densify:
+            raise ValueError(
+                "device_densify=True has no onehot realisation (impl='onehot' "
+                "routes to the per-block engine)"
+            )
         return ENGINES["blocks"](impl=impl, stats=stats)
     if engine == "sharded":
         n_shards = int(mesh.shape["data"]) if mesh is not None else 1
         if n_shards <= 1:
-            return ENGINES["fused"](impl=impl, stats=stats)
-        return ENGINES["sharded"](mesh=mesh, impl=impl, stats=stats)
-    return ENGINES[engine](impl=impl, stats=stats)
+            return ENGINES["fused"](
+                impl=impl, device_densify=device_densify, stats=stats
+            )
+        return ENGINES["sharded"](
+            mesh=mesh, impl=impl, device_densify=device_densify, stats=stats
+        )
+    if device_densify and engine != "fused":
+        raise ValueError(
+            f"engine={engine!r} has no device-densify path (fused/sharded only)"
+        )
+    kwargs = {"device_densify": device_densify} if engine == "fused" else {}
+    return ENGINES[engine](impl=impl, stats=stats, **kwargs)
 
 
 # -- the fused engine ---------------------------------------------------------
@@ -558,27 +761,90 @@ def make_engine(
 
 @register_engine("fused")
 class FusedEngine(MappingEngine):
-    """One fused dispatch for the whole chunk (all columns, all blocks)."""
+    """One fused dispatch for the whole chunk (all columns, all blocks).
+
+    ``device_densify=True`` skips the host scatter entirely: densify packs
+    the chunk's raw columnar items + routing into ONE flat int32 buffer
+    (:func:`_pack_columnar`), and dispatch resolves, densifies and maps them
+    inside the one fused launch (:func:`repro.kernels.ops.
+    dmm_apply_columnar`) against the plan's device-resident uid tables --
+    one host->device transfer and one dispatch per chunk.  Chunks below
+    ``min_device_events`` selected events fall back to the host scatter
+    (kernel padding would dominate); the host path also remains the
+    bit-exactness oracle.
+    """
+
+    def __init__(
+        self,
+        *,
+        impl: str = "ref",
+        device_densify: bool = False,
+        min_device_events: int = 32,
+        stats=None,
+    ):
+        super().__init__(impl=impl, stats=stats)
+        self.device_densify = device_densify
+        self.min_device_events = min_device_events
 
     def _compile_plan(self, compiled: CompiledDMM, registry: Registry) -> FusedDMM:
         return compile_fused(compiled, registry)
 
-    def densify(self, groups: Groups) -> Optional[DenseChunk]:
-        return _densify_chunk(self.plan, groups)
-
-    def dispatch(self, dense: DenseChunk) -> DispatchHandle:
-        fused = dense.plan
-        s = dense.row_ids.size
+    def densify(self, groups: Groups):
+        tri = as_triaged(groups)
+        if tri is None:
+            return None
+        layout = _chunk_layout(self.plan, tri, self.stats)
+        if layout is None:
+            return None
+        if not self.device_densify or layout.sel.size < self.min_device_events:
+            return _densify_host(self.plan, layout)
+        s = layout.row_ids.size
         s_pad = bucket_rows(s)
-        impl = {"gather": "fused"}.get(self.impl, self.impl)
-        outputs = dmm_apply_fused(
-            jnp.asarray(dense.vals),
-            jnp.asarray(dense.mask),
-            jnp.asarray(np.pad(dense.row_ids, (0, s_pad - s))),
-            jnp.asarray(np.pad(dense.blk_ids, (0, s_pad - s))),
-            fused.src2d,
-            impl=impl,
+        rows = np.zeros(s_pad, np.int32)
+        blks = np.zeros(s_pad, np.int32)
+        rows[:s] = layout.row_ids
+        blks[:s] = layout.blk_ids
+        packed, ni, b, k = _pack_columnar(layout, rows, blks)
+        return ColumnarDense(
+            plan=self.plan,
+            packed=packed,
+            n_items=ni,
+            n_events=b,
+            n_rows=s_pad,
+            k=k,
+            row_ids=layout.row_ids,
+            blk_ids=layout.blk_ids,
+            out_keys=layout.out_keys,
         )
+
+    def dispatch(self, dense) -> DispatchHandle:
+        fused = dense.plan
+        impl = {"gather": "fused"}.get(self.impl, self.impl)
+        if isinstance(dense, ColumnarDense):
+            outputs = dmm_apply_columnar(
+                dense.packed,
+                fused.uid_slot_dev,
+                fused.uid_col_dev,
+                fused.src2d,
+                n_items=dense.n_items,
+                n_events=dense.n_events,
+                n_rows=dense.n_rows,
+                k=dense.k,
+                impl=impl,
+            )
+            self.stats["transfers"] += 1  # the packed buffer is the chunk
+        else:
+            s = dense.row_ids.size
+            s_pad = bucket_rows(s)
+            outputs = dmm_apply_fused(
+                jnp.asarray(dense.vals),
+                jnp.asarray(dense.mask),
+                jnp.asarray(np.pad(dense.row_ids, (0, s_pad - s))),
+                jnp.asarray(np.pad(dense.blk_ids, (0, s_pad - s))),
+                fused.src2d,
+                impl=impl,
+            )
+            self.stats["transfers"] += 4  # vals, mask, rows, blks
         self.stats["dispatches"] += 1
         return DispatchHandle(outputs=outputs, dense=dense)
 
@@ -594,7 +860,9 @@ class FusedEngine(MappingEngine):
             "engine": self.name,
             "impl": self.impl,
             "n_shards": 1,
+            "device_densify": self.device_densify,
             "dispatches": int(self.stats["dispatches"]),
+            "transfers": int(self.stats["transfers"]),
         }
         if self.plan is not None:
             p = self.plan
@@ -621,50 +889,97 @@ class ShardedEngine(MappingEngine):
     all-gather of the emitted dense rows in emit and the shared emission
     pass in global (replicated-engine) order -- bit-exact with ``fused``."""
 
-    def __init__(self, *, mesh, impl: str = "ref", stats=None):
+    def __init__(
+        self, *, mesh, impl: str = "ref", device_densify: bool = False,
+        min_device_events: int = 32, stats=None,
+    ):
         super().__init__(impl=impl, stats=stats)
         if mesh is None:
             raise ValueError("engine='sharded' needs a mesh (make_etl_mesh)")
         self.mesh = mesh
         self.n_shards = int(mesh.shape["data"])
+        self.device_densify = device_densify
+        self.min_device_events = min_device_events
 
     def _compile_plan(self, compiled: CompiledDMM, registry: Registry) -> ShardedFusedDMM:
         # each device gets only its slice of the block table; the replicated
         # FusedDMM is never materialised on this path
         return compile_fused_sharded(compiled, registry, mesh=self.mesh)
 
-    def densify(self, groups: Groups) -> Optional[DenseChunk]:
-        dense = _densify_chunk(self.plan, groups)
-        if dense is None:
-            return None
-        # split the global (row, block) routing by owning shard; the
-        # contiguous block partition makes ownership a divide, and each
-        # shard's selection preserves global order for the scatter-back
-        sh = dense.plan
+    def _shard_split(self, row_ids, blk_ids):
+        """Split the global (row, block) routing by owning shard; the
+        contiguous block partition makes ownership a divide, and each
+        shard's selection preserves global order for the scatter-back."""
+        sh = self.plan
         per = sh.blocks_per_shard
-        owner = dense.blk_ids // per
+        owner = blk_ids // per
         sel = [np.nonzero(owner == s)[0] for s in range(sh.n_shards)]
         s_pad = bucket_rows(max(len(idx) for idx in sel))
         rows_sh = np.zeros((sh.n_shards, s_pad), np.int32)
         blks_sh = np.zeros((sh.n_shards, s_pad), np.int32)
         for s, idx in enumerate(sel):
-            rows_sh[s, : len(idx)] = dense.row_ids[idx]
-            blks_sh[s, : len(idx)] = dense.blk_ids[idx] - s * per
-        dense.shard_sel, dense.rows_sh, dense.blks_sh = sel, rows_sh, blks_sh
-        return dense
+            rows_sh[s, : len(idx)] = row_ids[idx]
+            blks_sh[s, : len(idx)] = blk_ids[idx] - s * per
+        return sel, rows_sh, blks_sh
 
-    def dispatch(self, dense: DenseChunk) -> DispatchHandle:
+    def densify(self, groups: Groups):
+        tri = as_triaged(groups)
+        if tri is None:
+            return None
+        layout = _chunk_layout(self.plan, tri, self.stats)
+        if layout is None:
+            return None
+        sel, rows_sh, blks_sh = self._shard_split(layout.row_ids, layout.blk_ids)
+        if not self.device_densify or layout.sel.size < self.min_device_events:
+            dense = _densify_host(self.plan, layout)
+            dense.shard_sel, dense.rows_sh, dense.blks_sh = sel, rows_sh, blks_sh
+            return dense
+        # per-shard routing rides flattened in the packed buffer; the kernel
+        # side reshapes to (n_shards, S_loc) and shard_map fans it out
+        packed, ni, b, k = _pack_columnar(layout, rows_sh.ravel(), blks_sh.ravel())
+        return ColumnarDense(
+            plan=self.plan,
+            packed=packed,
+            n_items=ni,
+            n_events=b,
+            n_rows=rows_sh.shape[1],
+            k=k,
+            row_ids=layout.row_ids,
+            blk_ids=layout.blk_ids,
+            out_keys=layout.out_keys,
+            shard_sel=sel,
+            n_shards=self.n_shards,
+        )
+
+    def dispatch(self, dense) -> DispatchHandle:
         sh = dense.plan
         impl = {"gather": "fused"}.get(self.impl, self.impl)
-        outputs = dmm_apply_sharded(
-            jnp.asarray(dense.vals),
-            jnp.asarray(dense.mask),
-            jnp.asarray(dense.rows_sh),
-            jnp.asarray(dense.blks_sh),
-            sh.src3d,
-            mesh=sh.mesh,
-            impl=impl,
-        )
+        if isinstance(dense, ColumnarDense):
+            outputs = dmm_apply_columnar_sharded(
+                dense.packed,
+                sh.uid_slot_dev,
+                sh.uid_col_dev,
+                sh.src3d,
+                mesh=sh.mesh,
+                n_items=dense.n_items,
+                n_events=dense.n_events,
+                n_rows=dense.n_rows,
+                k=dense.k,
+                n_shards=dense.n_shards,
+                impl=impl,
+            )
+            self.stats["transfers"] += 1
+        else:
+            outputs = dmm_apply_sharded(
+                jnp.asarray(dense.vals),
+                jnp.asarray(dense.mask),
+                jnp.asarray(dense.rows_sh),
+                jnp.asarray(dense.blks_sh),
+                sh.src3d,
+                mesh=sh.mesh,
+                impl=impl,
+            )
+            self.stats["transfers"] += 4
         self.stats["dispatches"] += 1
         return DispatchHandle(outputs=outputs, dense=dense)
 
@@ -687,7 +1002,9 @@ class ShardedEngine(MappingEngine):
             "engine": self.name,
             "impl": self.impl,
             "n_shards": self.n_shards,
+            "device_densify": self.device_densify,
             "dispatches": int(self.stats["dispatches"]),
+            "transfers": int(self.stats["transfers"]),
         }
         if self.plan is not None:
             p = self.plan
@@ -728,10 +1045,14 @@ class BlocksEngine(MappingEngine):
         super().__init__(impl=impl, stats=stats)
         self._registry: Optional[Registry] = None
         self._luts: Dict[Tuple[int, int], np.ndarray] = {}
+        self._uid_col_global: Optional[np.ndarray] = None
 
     def _compile_plan(self, compiled: CompiledDMM, registry: Registry) -> CompiledDMM:
         self._registry = registry
         self._luts = {}  # uid -> slot tables are per registry state
+        # plan-global uid -> owning-column table, so stats["unknown_uid"] is
+        # counted identically to the fused engines (which carry it on the plan)
+        self._uid_col_global = global_uid_tables(compiled, registry)[1]
         return compiled  # the per-block plan IS the compiled DPM
 
     def _column_lut(self, o: int, v: int) -> np.ndarray:
@@ -746,6 +1067,7 @@ class BlocksEngine(MappingEngine):
         if tri is None:
             return None
         chunk = tri.chunk
+        _count_unknown_uids(self._uid_col_global, chunk, tri.by_column, self.stats)
         out = []
         for (o, v), idx in tri.by_column.items():
             idx = np.asarray(idx, dtype=np.int64)

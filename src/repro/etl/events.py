@@ -109,6 +109,13 @@ class ColumnarChunk:
     event_offsets: np.ndarray  # int64 (n_events+1,): CSR offsets into uids/vals
     keys: np.ndarray  # int64 (n_events,): dedup/emission key per event
     bad: np.ndarray  # bool (n_events,): event carried a non-numeric value
+    # triage metadata columns (state / schema / version per event): filled
+    # by columnarize (which is walking the events anyway); lazily rebuilt
+    # for chunks constructed directly, so triage never touches the CDCEvent
+    # objects on the hot path (only the park / dead-letter error paths do)
+    states: Optional[np.ndarray] = None  # int64 (n_events,)
+    schema_ids: Optional[np.ndarray] = None  # int64 (n_events,)
+    versions: Optional[np.ndarray] = None  # int64 (n_events,)
 
     def __len__(self) -> int:
         return len(self.events)
@@ -121,6 +128,16 @@ class ColumnarChunk:
     @property
     def n_items(self) -> int:
         return int(self.uids.size)
+
+    def meta_columns(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The (states, schema_ids, versions) triage columns, built on first
+        use when the chunk was constructed without them."""
+        if self.states is None:
+            n = len(self.events)
+            self.states = np.fromiter((ev.state for ev in self.events), np.int64, count=n)
+            self.schema_ids = np.fromiter((ev.schema_id for ev in self.events), np.int64, count=n)
+            self.versions = np.fromiter((ev.version for ev in self.events), np.int64, count=n)
+        return self.states, self.schema_ids, self.versions
 
 
 def columnarize(events: List[CDCEvent]) -> ColumnarChunk:
@@ -137,8 +154,14 @@ def columnarize(events: List[CDCEvent]) -> ColumnarChunk:
     offsets = np.zeros(len(events) + 1, dtype=np.int64)
     keys = np.zeros(len(events), dtype=np.int64)
     bad = np.zeros(len(events), dtype=bool)
+    states = np.zeros(len(events), dtype=np.int64)
+    schema_ids = np.zeros(len(events), dtype=np.int64)
+    versions = np.zeros(len(events), dtype=np.int64)
     for e, ev in enumerate(events):
         keys[e] = ev.key
+        states[e] = ev.state
+        schema_ids[e] = ev.schema_id
+        versions[e] = ev.version
         ev_uids: List[int] = []
         ev_vals: List[float] = []
         for uid, val in ev.payload().items():
@@ -153,13 +176,21 @@ def columnarize(events: List[CDCEvent]) -> ColumnarChunk:
             uids.extend(ev_uids)
             vals.extend(ev_vals)
         offsets[e + 1] = len(uids)
+    # uids live in an int32 column (they index int32 dense tables); a uid
+    # beyond that range -- an event racing far ahead of any schema the plan
+    # could know -- is unknown by definition, so clamp it to the -1 foreign
+    # sentinel instead of overflowing the cast
+    u = np.asarray(uids, dtype=np.int64)
     return ColumnarChunk(
         events=events,
-        uids=np.asarray(uids, dtype=np.int32),
+        uids=np.where((u >= 0) & (u < np.int64(2**31)), u, -1).astype(np.int32),
         vals=np.asarray(vals, dtype=np.float32),
         event_offsets=offsets,
         keys=keys,
         bad=bad,
+        states=states,
+        schema_ids=schema_ids,
+        versions=versions,
     )
 
 

@@ -73,6 +73,7 @@ class METLApp:
         impl: str = "ref",
         engine: Union[str, MappingEngine] = "fused",
         mesh=None,
+        device_densify: bool = False,
     ):
         self.coordinator = coordinator
         self.strict_state = strict_state
@@ -83,7 +84,10 @@ class METLApp:
         # also applies the legacy impl="onehot" -> blocks and 1-shard
         # sharded -> fused routing); instances are adopted as-is and share
         # the app's stats counter
-        self.engine = make_engine(engine, impl=impl, mesh=mesh, stats=self.stats)
+        self.engine = make_engine(
+            engine, impl=impl, mesh=mesh, device_densify=device_densify,
+            stats=self.stats,
+        )
         self._seen: collections.OrderedDict = collections.OrderedDict()
         self._dedup_window = dedup_window
         self._snapshot: Optional[SystemState] = None
@@ -211,35 +215,59 @@ class METLApp:
             self.ensure_ready()
         chunk = events if isinstance(events, ColumnarChunk) else columnarize(events)
         by_column: Dict = collections.defaultdict(list)
-        for e, ev in enumerate(chunk.events):
-            if not replay:
-                self.stats["events"] += 1
-            if self._is_duplicate(ev.key):
+        # hot loop runs on python scalars pulled from the chunk's metadata
+        # columns once (.tolist()); the CDCEvent objects are touched only on
+        # the park / dead-letter error paths.  Same per-event order and
+        # semantics as the legacy object walk (incl. mid-chunk strict-state
+        # raise and dedup-window eviction), just without per-event attribute
+        # access.
+        states, schema_ids, versions = chunk.meta_columns()
+        keys = chunk.keys.tolist()
+        bad = chunk.bad.tolist()
+        states = states.tolist()
+        schema_ids = schema_ids.tolist()
+        versions = versions.tolist()
+        app_state = self._snapshot.i
+        seen = self._seen
+        window = self._dedup_window
+        stats = self.stats
+        # bulk-count arrivals unless a mid-chunk strict-state raise could
+        # leave the count legitimately partial (legacy per-event semantics)
+        if not replay and not self.strict_state:
+            stats["events"] += len(keys)
+        for e, key in enumerate(keys):
+            if not replay and self.strict_state:
+                stats["events"] += 1
+            if key in seen:
+                stats["duplicates"] += 1
                 continue
-            if chunk.bad[e]:
+            seen[key] = True
+            while len(seen) > window:
+                seen.popitem(last=False)
+            if bad[e]:
                 # un-scatterable payload (str/bool/Decimal/...): semi-
                 # automated error path, same as an outdated event -- dead-
                 # letter for offset reset after the producer is fixed
-                self.dead_letter.append(ev)
-                self.stats["bad_payload"] += 1
-                self.stats["dead_lettered"] += 1
+                self.dead_letter.append(chunk.events[e])
+                stats["bad_payload"] += 1
+                stats["dead_lettered"] += 1
                 continue
-            if ev.state != self._snapshot.i:
-                self.stats["stale"] += 1
+            if states[e] != app_state:
+                stats["stale"] += 1
                 if self.strict_state:
                     raise StaleStateError(
-                        f"event state {ev.state} != app state {self._snapshot.i}"
+                        f"event state {states[e]} != app state {app_state}"
                     )
-                if ev.state > self._snapshot.i:
+                if states[e] > app_state:
                     # the *app* is behind: park, replayed after refresh
-                    self._parked.append(ev)
-                    self.stats["parked"] += 1
+                    self._parked.append(chunk.events[e])
+                    stats["parked"] += 1
                 else:
                     # the event is outdated: dead-letter for offset reset
-                    self.dead_letter.append(ev)
-                    self.stats["dead_lettered"] += 1
+                    self.dead_letter.append(chunk.events[e])
+                    stats["dead_lettered"] += 1
                 continue
-            by_column[(ev.schema_id, ev.version)].append(e)
+            by_column[(schema_ids[e], versions[e])].append(e)
         return TriagedChunk(
             chunk=chunk,
             by_column={

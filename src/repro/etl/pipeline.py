@@ -49,6 +49,15 @@ chunk N+1's begins), which keeps async consume bit-exact with sync consume
 two chunks are in flight (one on device, one densifying): that bound is the
 double buffer's built-in backpressure.
 
+With a ``device_densify=True`` engine the "densify" half shrinks to the
+layout + pack pass (:class:`~repro.etl.engines.ColumnarDense`): there is NO
+host per-chunk scatter at all -- the raw columnar items cross host->device
+in one packed transfer and densification happens inside chunk N's single
+fused dispatch, so the overlapped host work per chunk is just triage,
+routing and the int32 pack.  The stage seam and the epoch pin are unchanged
+(``ColumnarDense.plan``/``.epoch``), so everything below -- async consume,
+control boundaries, parked replay -- applies identically.
+
 The double buffer is deliberately single-threaded on the host: jax's async
 dispatch already provides the concurrency, and the A/B in
 benchmarks/bench_mapping.py showed that pushing densify onto a worker

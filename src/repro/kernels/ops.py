@@ -28,6 +28,10 @@ from .segmented_gather import (
     segmented_gather as _segmented_gather_kernel,
     segmented_gather_shard as _segmented_gather_shard,
 )
+from .densify_map import (
+    densify_map as _densify_map_kernel,
+    densify_map_shard as _densify_map_shard,
+)
 from .onehot_map import onehot_map as _onehot_map_kernel
 from .moe_combine import moe_combine as _moe_combine_kernel
 from .flash_attention import flash_attention as _flash_attention_kernel
@@ -36,6 +40,8 @@ __all__ = [
     "dmm_apply",
     "dmm_apply_fused",
     "dmm_apply_sharded",
+    "dmm_apply_columnar",
+    "dmm_apply_columnar_sharded",
     "moe_combine",
     "attention",
     "on_tpu",
@@ -206,6 +212,216 @@ def dmm_apply_sharded(
         raise ValueError(f"unknown impl {impl!r}")
     return _sharded_program(mesh, axis, impl, float(fill))(
         values, mask, rows, blks, src3d
+    )
+
+
+# ---------------------------------------------------------------------------
+# Device-resident densification: one packed transfer, one dispatch per chunk
+# ---------------------------------------------------------------------------
+#
+# The columnar entry points take ONE flat int32 buffer per chunk -- the raw
+# (uid, value-bits) item columns, the CSR (start, count) of each selected
+# event, its plan column id, and the (rows, blks) routing -- plus the plan's
+# device-resident uid tables and block table.  uid resolution, densification
+# and the fused mapping all happen inside a single jit, so the per-chunk
+# host->device traffic is exactly one buffer and the dispatch count stays 1.
+# The packed layout (built by repro.etl.engines._pack_columnar):
+#
+#     [ uids(NI) | val_bits(NI) | starts(B) | counts(B) | ev_col(B) | routing ]
+#
+# with routing = rows(S)+blks(S) replicated, or the (n_shards, S_loc)
+# pair flattened for the sharded path.  Values travel as int32 bitcasts so
+# the whole buffer is one dtype (one transfer, no repacking on device).
+
+
+def _resolve_items(packed, uid_slot, uid_col, *, n_items: int, n_events: int, k: int):
+    """Unpack the item columns and resolve them against the plan tables.
+
+    Returns ``(slot2d, x2d)``: per selected event, its first K payload items
+    as (payload slot | -1 dropped, value) -- the operand layout of
+    :func:`repro.kernels.densify_map.densify_map`.  An item is dropped when
+    its CSR slot is padding, its uid is out of table range or unknown, or
+    its uid belongs to a different column than the event's (the host
+    ``_densify_chunk`` owner-check semantics).
+    """
+    ni, b = n_items, n_events
+    uids = packed[:ni]
+    vals = jax.lax.bitcast_convert_type(packed[ni : 2 * ni], jnp.float32)
+    o = 2 * ni
+    starts = packed[o : o + b]
+    counts = packed[o + b : o + 2 * b]
+    ev_col = packed[o + 2 * b : o + 3 * b]
+    kk = jnp.arange(k, dtype=jnp.int32)
+    item_valid = kk[None, :] < counts[:, None]  # (b, k)
+    ix = jnp.where(item_valid, starts[:, None] + kk[None, :], 0)
+    iu = jnp.take(uids, ix.reshape(-1), mode="clip").reshape(b, k)
+    iv = jnp.take(vals, ix.reshape(-1), mode="clip").reshape(b, k)
+    nu = uid_slot.shape[0]
+    if nu == 0:
+        keep = jnp.zeros_like(item_valid)
+        slot = jnp.full((b, k), -1, jnp.int32)
+    else:
+        uid_ok = (iu >= 0) & (iu < nu)
+        su = jnp.where(uid_ok, iu, 0)
+        slot = jnp.take(uid_slot, su.reshape(-1), mode="clip").reshape(b, k)
+        owner = jnp.take(uid_col, su.reshape(-1), mode="clip").reshape(b, k)
+        keep = item_valid & uid_ok & (slot >= 0) & (owner == ev_col[:, None])
+    slot2d = jnp.where(keep, slot, jnp.int32(-1))
+    x2d = jnp.where(keep, iv, jnp.float32(0))
+    return slot2d, x2d
+
+
+def _route_offset(n_items: int, n_events: int) -> int:
+    return 2 * n_items + 3 * n_events
+
+
+@functools.lru_cache(maxsize=None)
+def _columnar_program(impl: str, fill: float, donate: bool):
+    """One jitted resolve+densify+map program per (impl, fill, donate).
+
+    ``donate`` hands the packed per-chunk buffer back to jax on the steady-
+    state path (it is dead after the launch); donation is disabled on CPU
+    where XLA cannot alias it and would warn per call.
+    """
+
+    def fn(packed, uid_slot, uid_col, src2d, *, n_items, n_events, n_rows, k):
+        slot2d, x2d = _resolve_items(
+            packed, uid_slot, uid_col, n_items=n_items, n_events=n_events, k=k
+        )
+        o = _route_offset(n_items, n_events)
+        rows = packed[o : o + n_rows]
+        blks = packed[o + n_rows : o + 2 * n_rows]
+        if impl == "ref":
+            return _ref.densify_map_ref(slot2d, x2d, rows, blks, src2d, fill=fill)
+        return _densify_map_kernel(
+            slot2d, x2d, rows, blks, src2d, fill=fill, interpret=not on_tpu()
+        )
+
+    return jax.jit(
+        fn,
+        static_argnames=("n_items", "n_events", "n_rows", "k"),
+        donate_argnums=(0,) if donate else (),
+    )
+
+
+def dmm_apply_columnar(
+    packed: jax.Array,
+    uid_slot: jax.Array,
+    uid_col: jax.Array,
+    src2d: jax.Array,
+    *,
+    n_items: int,
+    n_events: int,
+    n_rows: int,
+    k: int,
+    impl: str = "auto",
+    fill: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Densify + map a whole chunk on-device in ONE dispatch.
+
+    ``packed`` is the chunk's single flat int32 operand buffer (layout
+    above; ``n_items``/``n_events``/``n_rows``/``k`` are its bucketed
+    section sizes, static per jit-cache entry); ``uid_slot``/``uid_col``/
+    ``src2d`` are the plan's device-resident tables, uploaded once per
+    state.  Returns ((n_rows, W) values, (n_rows, W) int8 mask) as
+    unblocked dispatch handles -- rows past the true routing length are
+    garbage the caller slices off, exactly as in
+    :func:`dmm_apply_fused`.
+
+    impl: "fused" (Pallas densify_map kernel) | "ref" (scatter-free jnp
+    oracle) | "auto" (kernel on TPU, oracle elsewhere).
+    """
+    global dispatch_count
+    dispatch_count += 1
+    if impl == "auto":
+        impl = "fused" if on_tpu() else "ref"
+    if impl not in ("ref", "fused"):
+        raise ValueError(f"unknown impl {impl!r}")
+    donate = jax.default_backend() != "cpu"
+    return _columnar_program(impl, float(fill), donate)(
+        packed, uid_slot, uid_col, src2d,
+        n_items=n_items, n_events=n_events, n_rows=n_rows, k=k,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _columnar_sharded_program(mesh, axis: str, impl: str, fill: float, donate: bool):
+    """Sharded twin of :func:`_columnar_program`: the uid resolve runs
+    replicated inside the same jit, then shard_map fans the per-shard
+    routing and block-table slice out exactly like
+    :func:`_sharded_program`."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if impl == "ref":
+
+        def local(s2, x2, r, b, t):
+            ov, om = _ref.densify_map_ref(s2, x2, r[0], b[0], t[0], fill=fill)
+            return ov[None], om[None]
+
+    else:
+        local = functools.partial(
+            _densify_map_shard, fill=fill, interpret=not on_tpu()
+        )
+
+    inner = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P(), P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P(axis)),
+        check_rep=False,
+    )
+
+    def fn(packed, uid_slot, uid_col, src3d, *, n_items, n_events, n_rows, k, n_shards):
+        slot2d, x2d = _resolve_items(
+            packed, uid_slot, uid_col, n_items=n_items, n_events=n_events, k=k
+        )
+        o = _route_offset(n_items, n_events)
+        rows = packed[o : o + n_shards * n_rows].reshape(n_shards, n_rows)
+        o += n_shards * n_rows
+        blks = packed[o : o + n_shards * n_rows].reshape(n_shards, n_rows)
+        return inner(slot2d, x2d, rows, blks, src3d)
+
+    return jax.jit(
+        fn,
+        static_argnames=("n_items", "n_events", "n_rows", "k", "n_shards"),
+        donate_argnums=(0,) if donate else (),
+    )
+
+
+def dmm_apply_columnar_sharded(
+    packed: jax.Array,
+    uid_slot: jax.Array,
+    uid_col: jax.Array,
+    src3d: jax.Array,
+    *,
+    mesh,
+    n_items: int,
+    n_events: int,
+    n_rows: int,
+    k: int,
+    n_shards: int,
+    axis: str = "data",
+    impl: str = "auto",
+    fill: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sharded device densify: the resolved item tables stay replicated,
+    each mesh-``axis`` shard densifies + maps its own routing slice against
+    its own block-table slice under shard_map.  ``n_rows`` is the PER-SHARD
+    routing length (the packed buffer carries the flattened (n_shards,
+    n_rows) rows/blks pair).  One host dispatch per chunk; returns the
+    stacked (n_shards, n_rows, W) outputs as unblocked handles."""
+    global dispatch_count
+    dispatch_count += 1
+    if impl == "auto":
+        impl = "fused" if on_tpu() else "ref"
+    if impl not in ("ref", "fused"):
+        raise ValueError(f"unknown impl {impl!r}")
+    donate = jax.default_backend() != "cpu"
+    return _columnar_sharded_program(mesh, axis, impl, float(fill), donate)(
+        packed, uid_slot, uid_col, src3d,
+        n_items=n_items, n_events=n_events, n_rows=n_rows, k=k,
+        n_shards=n_shards,
     )
 
 

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 __all__ = [
     "masked_gather_ref",
     "segmented_gather_ref",
+    "densify_map_ref",
     "onehot_map_ref",
     "moe_combine_ref",
 ]
@@ -64,6 +65,42 @@ def segmented_gather_ref(
     out_m = jnp.take_along_axis(m_rows, safe, axis=1) & valid
     out_v = jnp.where(out_m, out_v, jnp.asarray(fill, values.dtype))
     return out_v, out_m.astype(jnp.int8)
+
+
+def densify_map_ref(
+    slot2d: jax.Array,
+    x2d: jax.Array,
+    rows: jax.Array,
+    blks: jax.Array,
+    src2d: jax.Array,
+    *,
+    fill: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Device-densify + fused-mapping oracle (scatter-free formulation).
+
+    slot2d: (B, K) int32 payload slot per columnar item of event row b
+    (-1 = dropped/foreign/padding), x2d: (B, K) values, rows/blks: (S,)
+    int32 routing, src2d: (n_blocks_pad, W) int32 block table.  Equivalent
+    to scattering each event's items into a dense (B, n_in) row and
+    applying :func:`segmented_gather_ref`, but the scatter and the gather
+    cancel into a K-term compare-select, so no dense intermediate is built
+    (XLA scatter is the slow path on every backend).  Duplicate slots
+    within an event resolve last-writer-wins (ascending item index),
+    matching numpy fancy-index assignment in the host densify.
+    Returns (out_values (S, W), out_mask (S, W) int8).
+    """
+    k = slot2d.shape[1]
+    src = jnp.take(src2d, blks, axis=0)  # (S, W)
+    valid = src >= 0
+    es = jnp.take(slot2d, rows, axis=0)  # (S, K)
+    ex = jnp.take(x2d, rows, axis=0)  # (S, K)
+    acc = jnp.full(src.shape, fill, x2d.dtype)
+    hit = jnp.zeros(src.shape, jnp.bool_)
+    for j in range(k):  # K = items/event (tiny, static): unrolled selects
+        m = valid & (src == es[:, j][:, None])
+        acc = jnp.where(m, ex[:, j][:, None], acc)
+        hit = hit | m
+    return acc, hit.astype(jnp.int8)
 
 
 def onehot_map_ref(

@@ -29,6 +29,16 @@ entrypoint.
     PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b --smoke \
         --etl --shards 4
 
+``--device-densify`` (with ``--etl``) moves chunk densification on-device:
+the raw columnar (uid, value) items cross the host->device boundary in ONE
+packed int32 transfer per chunk and are resolved + densified + mapped inside
+the single fused dispatch (:mod:`repro.kernels.densify_map`) -- no host
+scatter, no dense payload tensor on the PCIe link.  Composes with
+``--shards`` and ``--instances``::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b --smoke \
+        --etl --device-densify --async-consume
+
 ``--instances N`` (with ``--etl``) fans the stream over a multi-instance
 :class:`~repro.etl.cluster.Cluster`: N pipelines over deterministic
 round-robin slices of one chunk grid, one coordinator as the single state
@@ -53,6 +63,7 @@ def _etl_prompts(
     shards: int = 0,
     async_consume: bool = False,
     instances: int = 0,
+    device_densify: bool = False,
 ):
     """Stream CDC events through the METL pipeline into token prompts.
 
@@ -88,6 +99,7 @@ def _etl_prompts(
         cluster = Cluster.over_stream(
             coord, stream, instances=instances, chunk_size=256,
             sinks=[sink], engine=engine, mesh=mesh,
+            device_densify=device_densify,
             async_consume=async_consume,
         )
         # pull until the bounded sink gates the stream; a whole window of
@@ -111,7 +123,12 @@ def _etl_prompts(
             f"{', async double-buffered' if async_consume else ''}"
         )
         return sink.prompts
-    app = METLApp(coord, engine=engine, mesh=mesh)
+    app = METLApp(coord, engine=engine, mesh=mesh, device_densify=device_densify)
+    if device_densify:
+        print(
+            "etl: device densify on -- raw columnar items cross host->device "
+            "in one packed transfer, densified inside the fused dispatch"
+        )
     if shards > 1:
         info = app.engine.info()
         print(
@@ -160,6 +177,10 @@ def main() -> None:
     ap.add_argument("--async-consume", action="store_true",
                     help="with --etl: double-buffered pipeline consume "
                          "(chunk N+1 densifies while chunk N is on device)")
+    ap.add_argument("--device-densify", action="store_true",
+                    help="with --etl: densify on-device (one packed "
+                         "host->device transfer + one fused dispatch per "
+                         "chunk; no host scatter)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=256)
@@ -189,6 +210,7 @@ def main() -> None:
         prompts = _etl_prompts(
             args.requests, cfg.vocab, shards=args.shards,
             async_consume=args.async_consume, instances=args.instances,
+            device_densify=args.device_densify,
         )
     else:
         rng = np.random.default_rng(0)
