@@ -3,25 +3,33 @@
 #
 #     bash scripts/ci.sh
 #
-# 1. the FULL test suite with zero tolerated failures -- the 16 historical
-#    reds (optimization_barrier grad rule, jax.sharding.AxisType) are fixed,
-#    so there is no known-failure allowance any more; this includes the
-#    tier-1 set (ROADMAP.md), the multi-device subprocess tests, and the
-#    sharded-vs-replicated fused-consume parity tests;
-# 2. an API-hygiene gate: no private METLApp reach-ins (``app._``) outside
-#    the repro.etl package -- launchers/benchmarks must use the public
-#    engine protocol (``app.engine.info()``, ``app.reset_dedup()``) -- and
-#    no private Registry reach-ins (``registry._``) outside repro.core --
-#    state transitions go through the coordinator's control plane
-#    (``coordinator.apply(event)``) or public ``Registry.bump_state()``;
-# 3. the streaming-pipeline example (two sinks, async double-buffered
+# 1. the static invariant analyzer (python -m repro.analysis) over
+#    src/benchmarks/examples: six AST rules replacing the old git-grep
+#    hygiene gates -- private-reach-in (no private METLApp/engine/Registry
+#    access outside repro.etl / repro.core, alias-aware),
+#    host-sync-in-hot-path (dispatch stays unblocked; emit's sync points
+#    are annotated), hot-path-python-loop (no per-event loops/payload
+#    walks in densify/dispatch), control-plane-purity (mutate() only in
+#    StateCoordinator.apply; frozen ControlEvents), jit-cache-hygiene
+#    (lru_cache'd jit builders take hashable annotated args), and
+#    kernel-ref-parity (every Pallas kernel has a ref.py twin plus a
+#    parity test).  The JSON report is written next to the bench artifact
+#    (ANALYSIS.json).  Waivers are inline '# metl: allow[rule-id] reason'
+#    comments; a reasonless waiver fails the gate;
+# 2. a mypy pass (mypy.ini: repro.etl + repro.core, basic strictness) when
+#    mypy is importable; skipped with a notice on the bare jax container;
+# 3. the FULL test suite with zero tolerated failures -- includes the
+#    tier-1 set (ROADMAP.md), the multi-device subprocess tests, the
+#    sharded-vs-replicated fused-consume parity tests, and the analyzer's
+#    own suite (tests/test_analysis.py, incl. the repo self-check);
+# 4. the streaming-pipeline example (two sinks, async double-buffered
 #    consume) as an end-to-end smoke of the Pipeline API;
-# 4. the mid-stream schema-evolution example: typed control events riding
+# 5. the mid-stream schema-evolution example: typed control events riding
 #    the stream in-band (SchemaEvolved + a Freeze/Thaw window with a
 #    deferred evolution + VersionDeleted), applied at chunk boundaries by
 #    the single-writer coordinator, with the control-log replay
 #    determinism check (the script asserts state + DPM bit-exactness);
-# 5. a tiny-shape run of the mapping benchmark so the fused- and
+# 6. a tiny-shape run of the mapping benchmark so the fused- and
 #    sharded-engine perf paths (kernel, shard_map dispatcher, consume,
 #    sync-vs-async pipeline, columnar + device densify) can't rot silently
 #    even when no test exercises the timing harness.  bench_mapping itself
@@ -36,11 +44,11 @@
 #    out-of-band oracle, 4-instance cluster vs single instance).  The run
 #    goes through benchmarks/run.py --artifact, which writes a
 #    BENCH_<ts>.json trajectory artifact;
-# 6. the perf-trajectory diff: scripts/perf_diff.py compares the fresh
+# 7. the perf-trajectory diff: scripts/perf_diff.py compares the fresh
 #    artifact's events/s metrics against the last comparable artifact
 #    checked in under benchmarks/trajectory/ and fails on a >20% drop
 #    (tolerance overridable via PERF_TOL);
-# 7. the ETL roofline over the fresh artifact: every engine configuration
+# 8. the ETL roofline over the fresh artifact: every engine configuration
 #    (per-block, fused host-densify, fused device-densify, sharded both
 #    ways) priced on the transfer/memory/launch walls on one chart.
 set -euo pipefail
@@ -48,27 +56,29 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# created up front so the analyzer's JSON report lands next to the bench
+# artifact written in step 6
+BENCH_DIR="$(mktemp -d)"
+trap 'rm -rf "$BENCH_DIR"' EXIT
+
+echo "== static invariant analyzer (repro.analysis, 6 rules) =="
+python -m repro.analysis src benchmarks examples \
+    --output json --report "$BENCH_DIR/ANALYSIS.json" > /dev/null || {
+  echo "FAIL: analyzer findings (rerun without --output json for detail):" >&2
+  python -m repro.analysis src benchmarks examples >&2 || true
+  exit 1
+}
+python -m repro.analysis src benchmarks examples | tail -n 1
+
+echo "== mypy (repro.etl + repro.core, mypy.ini) =="
+if python -c "import mypy" 2>/dev/null; then
+  python -m mypy --config-file mypy.ini src/repro/etl src/repro/core
+else
+  echo "skipped: mypy not installed (pip install -r requirements-dev.txt)"
+fi
+
 echo "== full suite (tier-1 + distributed + sharded parity; 0 failures) =="
 python -m pytest -q
-
-echo "== API hygiene (no private METLApp reach-ins outside etl/) =="
-# two patterns: any variable literally named app*, and the known private
-# attribute names on ANY receiver (catches app_rep._fused, shd._sharded, ...)
-if git grep -nE "app\._|[A-Za-z0-9_)\]]\._(fused|sharded|compiled|seen|parked|replay_rows|snapshot|dedup_window|is_duplicate)\b" \
-    -- src benchmarks ':!src/repro/etl'; then
-  echo "FAIL: private METLApp attributes reached from outside repro.etl" >&2
-  echo "      (use app.engine.info() / app.reset_dedup() instead)" >&2
-  exit 1
-fi
-echo "clean"
-
-echo "== API hygiene (no private Registry reach-ins outside repro.core) =="
-if git grep -nE "registry\._[a-z]" -- src benchmarks examples ':!src/repro/core'; then
-  echo "FAIL: private Registry attributes reached from outside repro.core" >&2
-  echo "      (use coordinator.apply(ControlEvent) / Registry.bump_state())" >&2
-  exit 1
-fi
-echo "clean"
 
 echo "== pipeline example (two sinks, async double-buffered consume) =="
 python examples/pipeline_stream.py --chunks 4 --prompts 500
@@ -77,8 +87,6 @@ echo "== mid-stream schema evolution (in-band control + log replay) =="
 python examples/schema_evolution.py --steps 4
 
 echo "== benchmark smoke (fused/sharded engines, device densify, pipeline) =="
-BENCH_DIR="$(mktemp -d)"
-trap 'rm -rf "$BENCH_DIR"' EXIT
 python -m benchmarks.run --only mapping --smoke --artifact "$BENCH_DIR"
 
 echo "== perf trajectory diff (vs benchmarks/trajectory, >20% drop fails) =="

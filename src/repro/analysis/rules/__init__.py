@@ -1,0 +1,10 @@
+"""Built-in rule modules; importing this package registers all of them."""
+
+from . import (  # noqa: F401
+    control_purity,
+    host_sync,
+    hot_loop,
+    jit_cache,
+    kernel_parity,
+    private_reach_in,
+)

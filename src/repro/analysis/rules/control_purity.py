@@ -1,0 +1,129 @@
+"""control-plane-purity: the single-writer control plane stays single-writer.
+
+PR 5 made schema changes typed, in-band control events whose registry
+mutation runs ONLY inside :meth:`StateCoordinator.apply` -- that is the
+whole replayability story: ``apply`` appends every applied event to the
+epoch-ordered ``control_log``, so replaying the log over a seed registry
+reconstructs state bit-exactly.  A ``event.mutate(registry)`` call
+anywhere else mutates the registry *without* logging it, silently breaking
+log replay (a fresh instance joining from the log would diverge).
+Likewise, a mutable ControlEvent subclass lets a caller edit an event
+after it was logged, corrupting the already-written history.
+
+Two checks:
+
+  * ``.mutate(...)`` may be called only inside ``StateCoordinator.apply``;
+  * every class deriving (transitively, within a file) from
+    ``ControlEvent`` must be decorated ``@dataclasses.dataclass(frozen=
+    True)``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from ..core import FileCtx, Finding, Rule, register
+
+
+def _dataclass_frozen(dec: ast.expr) -> bool:
+    """True for @dataclass(frozen=True) / @dataclasses.dataclass(frozen=True)."""
+    if not isinstance(dec, ast.Call):
+        return False
+    f = dec.func
+    name = f.id if isinstance(f, ast.Name) else (
+        f.attr if isinstance(f, ast.Attribute) else None
+    )
+    if name != "dataclass":
+        return False
+    for kw in dec.keywords:
+        if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+            return bool(kw.value.value)
+    return False
+
+
+@register
+class ControlPlanePurity(Rule):
+    id = "control-plane-purity"
+    title = "mutate() only inside StateCoordinator.apply; ControlEvents frozen"
+    motivation = (
+        "PR 5's control_log replay is bit-exact only because every registry "
+        "mutation is logged by the one writer; an unlogged mutate() or a "
+        "mutable logged event silently corrupts replay"
+    )
+
+    def check_file(self, ctx: FileCtx) -> Iterator[Finding]:
+        yield from self._check_mutate_calls(ctx)
+        yield from self._check_frozen_events(ctx)
+
+    # -- check 1: .mutate() call sites ---------------------------------------
+    def _check_mutate_calls(self, ctx: FileCtx) -> Iterator[Finding]:
+        for cls, fn, node in _calls_with_context(ctx.tree):
+            if not (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "mutate"
+            ):
+                continue
+            if cls == "StateCoordinator" and fn == "apply":
+                continue
+            where = f"{cls}.{fn}" if cls else (fn or "<module>")
+            yield ctx.finding(
+                self.id,
+                node,
+                f".mutate() called from {where}: registry mutations must go "
+                "through StateCoordinator.apply(event) so they land in the "
+                "replayable control_log",
+            )
+
+    # -- check 2: ControlEvent subclasses are frozen dataclasses --------------
+    def _check_frozen_events(self, ctx: FileCtx) -> Iterator[Finding]:
+        # transitive within the file: class X(ControlEvent) seeds, then
+        # class Y(X) inherits the obligation
+        event_classes: Set[str] = {"ControlEvent"}
+        classes = [
+            n for n in ast.walk(ctx.tree) if isinstance(n, ast.ClassDef)
+        ]
+        changed = True
+        while changed:
+            changed = False
+            for cls in classes:
+                if cls.name in event_classes:
+                    continue
+                for base in cls.bases:
+                    base_name = (
+                        base.id
+                        if isinstance(base, ast.Name)
+                        else base.attr if isinstance(base, ast.Attribute) else None
+                    )
+                    if base_name in event_classes:
+                        event_classes.add(cls.name)
+                        changed = True
+                        break
+        for cls in classes:
+            if cls.name not in event_classes or cls.name == "ControlEvent":
+                continue
+            if not any(_dataclass_frozen(d) for d in cls.decorator_list):
+                yield ctx.finding(
+                    self.id,
+                    cls,
+                    f"ControlEvent subclass {cls.name} is not a frozen "
+                    "dataclass; logged events must be immutable "
+                    "(@dataclasses.dataclass(frozen=True))",
+                )
+
+
+def _calls_with_context(tree: ast.Module):
+    """Yield (enclosing_class, enclosing_function, Call) for every call."""
+
+    def walk(node, cls, fn):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                yield from walk(child, child.name, fn)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from walk(child, cls, child.name)
+            else:
+                if isinstance(child, ast.Call):
+                    yield (cls, fn, child)
+                yield from walk(child, cls, fn)
+
+    yield from walk(tree, None, None)

@@ -1,0 +1,88 @@
+"""hot-path-python-loop: densification must stay vectorised -- no per-event
+python loops or payload-dict walks in densify/dispatch functions.
+
+PR 1 replaced the per-block, per-event python mapping walk with one fused
+dispatch; PR 4 replaced the per-event payload-dict densification walk with
+columnar numpy (8.5x densify events/s at 512-event chunks).  Both
+regressions re-enter the codebase the same way: an innocent ``for ev in
+events`` or ``ev.payload().items()`` inside a densify function, correct
+and quietly 10x slower.  This rule makes the loop itself the violation.
+
+Scope: functions whose name contains ``densify``/``dispatch`` plus the hot
+routing helpers (``_chunk_layout``/``_pack_columnar``), in ``repro.etl``
+and ``repro.kernels``.  Per-COLUMN and per-SHARD/per-BLOCK loops are fine
+(columns and shards are few and bounded); what is flagged is iteration
+whose trip count scales with the chunk: loops over events/items and any
+``.payload()`` call (the dict-walk marker).  The deliberate dict-walk
+oracle (:func:`repro.etl.engines.densify_chunk_dicts`) carries a
+function-level waiver on its ``def`` line.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator
+
+from ..core import FileCtx, Finding, Rule, register
+
+_HOT_NAME = re.compile(r"densify|dispatch|_chunk_layout|_pack_columnar")
+
+# iterable source text that scales with the chunk's event/item count
+_EVENTISH = re.compile(
+    r"\bevents\b|\bevs\b|\.payload\(|chunk\.keys|chunk\.uids|chunk\.vals"
+    r"|chunk\.events|\bitem_idx\b|\bev_rows\b"
+)
+
+
+@register
+class HotPathPythonLoop(Rule):
+    id = "hot-path-python-loop"
+    title = "no per-event python loops / payload-dict walks in densify or dispatch"
+    motivation = (
+        "the PR-1 (per-block python mapping walk) and PR-4 (per-event "
+        "payload-dict densify walk, 8.5x once vectorised) regression class"
+    )
+
+    def check_file(self, ctx: FileCtx) -> Iterator[Finding]:
+        if not (ctx.in_package("repro", "etl") or ctx.in_package("repro", "kernels")):
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if _HOT_NAME.search(node.name):
+                    yield from self._check_fn(ctx, node)
+
+    def _check_fn(self, ctx: FileCtx, fn) -> Iterator[Finding]:
+        where = f"in hot-path function {fn.name}()"
+        for node in ast.walk(fn):
+            # the dict-walk marker: ANY payload() call means per-event dicts
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "payload"
+            ):
+                yield ctx.finding(
+                    self.id,
+                    node,
+                    f".payload() {where}: per-event payload-dict walk "
+                    "(the PR-4 regression); densify from the chunk's "
+                    "columnar uids/vals arrays instead",
+                )
+                continue
+            iters = []
+            if isinstance(node, ast.For):
+                iters = [node.iter]
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)):
+                iters = [g.iter for g in node.generators]
+            for it in iters:
+                src = ctx.segment(it)
+                if _EVENTISH.search(src):
+                    yield ctx.finding(
+                        self.id,
+                        node,
+                        f"python loop over '{src}' {where} scales with the "
+                        "chunk's event/item count; vectorise it (see "
+                        "_segmented_arange / _event_items) or waive with a "
+                        "reason if it is an oracle path",
+                    )
+                    break

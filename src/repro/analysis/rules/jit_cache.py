@@ -1,0 +1,218 @@
+"""jit-cache-hygiene: lru_cache-wrapped jit program builders take only
+hashable, annotated static arguments.
+
+``kernels/ops.py`` builds its sharded/columnar programs inside
+``@functools.lru_cache`` factories (``_sharded_program``,
+``_columnar_program``, ``_columnar_sharded_program``) so the ``jax.jit``
+object -- and therefore its compilation cache -- is reused across chunks.
+The failure mode this rule exists for is *silent*: pass an unhashable
+value and lru_cache raises immediately (loud, fine), but pass a value
+that hashes differently every call (a fresh Mesh per chunk, a float read
+from an array, a tuple rebuilt from a list) and every chunk gets a fresh
+jit program -- correctness is untouched while compile time is added to
+every chunk.  The throughput bench reads as "jax got slower", not "the
+cache key churned".
+
+Checks, for any lru_cache-decorated function whose body builds a jit
+program (calls ``jax.jit`` / ``pjit`` / ``shard_map``):
+
+  * ``*args``/``**kwargs`` are flagged (unauditable cache key);
+  * every parameter must be annotated -- the annotation is how the next
+    reader (and this rule) audits the cache key;
+  * annotations must name hashable-by-value types (str/int/float/bool/
+    bytes/tuple/frozenset/Mesh/Hashable/...); array annotations
+    (``jax.Array``/``jnp.ndarray``/``np.ndarray``) are flagged outright:
+    arrays are unhashable, and "it worked" means someone passed a scalar
+    that will churn the key later.
+
+Same-file call sites of a cached builder passing list/dict/set literals
+are flagged too (unhashable at runtime).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set
+
+from ..core import FileCtx, Finding, Rule, register
+
+_HASHABLE = frozenset(
+    {
+        "str",
+        "int",
+        "float",
+        "bool",
+        "bytes",
+        "complex",
+        "tuple",
+        "Tuple",
+        "frozenset",
+        "FrozenSet",
+        "Mesh",
+        "AbstractMesh",
+        "Hashable",
+        "Optional",
+        "Union",
+        "Literal",
+        "Callable",
+        "None",
+        "NoneType",
+        "type",
+        "Type",
+        "Enum",
+        "DTypeLike",
+        "dtype",
+    }
+)
+
+_ARRAYISH = frozenset({"Array", "ndarray", "ArrayLike", "DeviceArray"})
+
+_JIT_NAMES = frozenset({"jit", "pjit", "shard_map"})
+
+
+def _is_lru_cache(dec: ast.expr) -> bool:
+    target = dec.func if isinstance(dec, ast.Call) else dec
+    if isinstance(target, ast.Attribute):
+        return target.attr in ("lru_cache", "cache")
+    if isinstance(target, ast.Name):
+        return target.id in ("lru_cache", "cache")
+    return False
+
+
+def _builds_jit(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            name = (
+                f.attr
+                if isinstance(f, ast.Attribute)
+                else f.id if isinstance(f, ast.Name) else None
+            )
+            if name in _JIT_NAMES:
+                return True
+    return False
+
+
+def _root_names(annot: ast.expr) -> List[str]:
+    """The identifier(s) that decide hashability of an annotation."""
+    if isinstance(annot, ast.Name):
+        return [annot.id]
+    if isinstance(annot, ast.Attribute):
+        return [annot.attr]
+    if isinstance(annot, ast.Constant):
+        if annot.value is None:
+            return ["None"]
+        if isinstance(annot.value, str):
+            return [annot.value.strip().rsplit(".", 1)[-1].split("[", 1)[0]]
+        return []
+    if isinstance(annot, ast.Subscript):
+        # Optional[X] / Union[X, Y] delegate to the args; Tuple[...] etc.
+        # are hashable by the root name alone
+        roots = _root_names(annot.value)
+        if roots and roots[0] in ("Optional", "Union"):
+            sl = annot.slice
+            elts = sl.elts if isinstance(sl, ast.Tuple) else [sl]
+            out: List[str] = []
+            for el in elts:
+                out.extend(_root_names(el))
+            return out
+        return roots
+    if isinstance(annot, ast.BinOp) and isinstance(annot.op, ast.BitOr):
+        return _root_names(annot.left) + _root_names(annot.right)
+    return []
+
+
+@register
+class JitCacheHygiene(Rule):
+    id = "jit-cache-hygiene"
+    title = "lru_cache'd jit builders take only annotated hashable static args"
+    motivation = (
+        "a churning cache key on ops.py's program builders recompiles every "
+        "chunk -- results stay correct, the bench just quietly reports jax "
+        "as slow (the PR-6 near-miss with per-chunk Mesh objects)"
+    )
+
+    def check_file(self, ctx: FileCtx) -> Iterator[Finding]:
+        cached: Set[str] = set()
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not any(_is_lru_cache(d) for d in node.decorator_list):
+                continue
+            if not _builds_jit(node):
+                continue
+            cached.add(node.name)
+            yield from self._check_builder(ctx, node)
+        if cached:
+            yield from self._check_call_sites(ctx, cached)
+
+    def _check_builder(self, ctx: FileCtx, fn) -> Iterator[Finding]:
+        args = fn.args
+        if args.vararg is not None or args.kwarg is not None:
+            star = args.vararg or args.kwarg
+            yield ctx.finding(
+                self.id,
+                fn,
+                f"cached jit builder {fn.name}() takes *{star.arg}: the "
+                "cache key cannot be audited; spell every static arg out",
+            )
+        for a in args.posonlyargs + args.args + args.kwonlyargs:
+            yield from self._check_param(ctx, fn, a)
+
+    def _check_param(self, ctx: FileCtx, fn, a: ast.arg) -> Iterator[Finding]:
+        if a.annotation is None:
+            yield ctx.finding(
+                self.id,
+                a,
+                f"parameter '{a.arg}' of cached jit builder {fn.name}() is "
+                "unannotated; annotate it with a hashable type so the "
+                "cache key is auditable",
+            )
+            return
+        roots = _root_names(a.annotation)
+        bad = self._bad_root(roots)
+        if bad is not None:
+            hint = (
+                "arrays are unhashable and churn the key"
+                if bad in _ARRAYISH
+                else "hash identity is not hash-by-value"
+            )
+            yield ctx.finding(
+                self.id,
+                a,
+                f"parameter '{a.arg}: {ctx.segment(a.annotation)}' of cached "
+                f"jit builder {fn.name}() is not a hashable static type "
+                f"({hint}); pass a str/int/tuple key instead",
+            )
+
+    @staticmethod
+    def _bad_root(roots: List[str]) -> Optional[str]:
+        for r in roots:
+            if r in _ARRAYISH:
+                return r
+            if r not in _HASHABLE:
+                return r
+        return None if roots else "?"
+
+    def _check_call_sites(self, ctx: FileCtx, cached: Set[str]) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            name = (
+                f.id
+                if isinstance(f, ast.Name)
+                else f.attr if isinstance(f, ast.Attribute) else None
+            )
+            if name not in cached:
+                continue
+            values = list(node.args) + [kw.value for kw in node.keywords]
+            for v in values:
+                if isinstance(v, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                                  ast.DictComp, ast.SetComp)):
+                    yield ctx.finding(
+                        self.id,
+                        v,
+                        f"unhashable literal passed to cached jit builder "
+                        f"{name}(); use a tuple/frozenset",
+                    )

@@ -1,0 +1,145 @@
+"""kernel-ref-parity: every Pallas kernel has a pure-jnp twin in ref.py and
+a parity test that exercises both.
+
+The repo's correctness story for accelerator code is twin-based: each
+kernel in ``kernels/`` (``pl.pallas_call`` users) ships a pure-``jnp``
+reference implementation in ``kernels/ref.py``, and a test asserts the two
+agree.  The twin is what makes a kernel reviewable (the ref IS the spec)
+and what CI actually runs in interpret mode.  A kernel without a twin, or
+a twin nothing compares against, is untested device code.
+
+Project-level checks (this rule sees the whole file set at once):
+
+  * every public top-level function in a ``pallas_call``-using module under
+    a ``kernels/`` directory must have a ``<name>_ref`` twin in that
+    directory's ``ref.py`` (aliases: ``flash_attention`` -> ``attention_ref``;
+    ``<base>_shard`` variants are covered by ``<base>``'s twin);
+  * some test file under the repo's ``tests/`` directory (located by
+    walking up from the kernels dir) must reference BOTH the kernel name
+    and its twin's name -- the onehot regression this encodes: a test that
+    called ``onehot_map`` but compared against ``masked_gather_ref``,
+    i.e. the twin existed and was never consulted.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, Iterator, List, Sequence, Set
+
+from ..core import FileCtx, Finding, Rule, register
+
+ALIASES = {"flash_attention": "attention_ref"}
+
+_SKIP_MODULES = {"ref.py", "__init__.py", "ops.py"}
+
+
+def _top_level_defs(tree: ast.Module) -> List[ast.FunctionDef]:
+    return [n for n in tree.body if isinstance(n, ast.FunctionDef)]
+
+
+def _twin_name(kernel: str) -> str:
+    base = kernel[: -len("_shard")] if kernel.endswith("_shard") else kernel
+    return ALIASES.get(base, base + "_ref")
+
+
+def _find_tests_dir(kernels_dir: Path) -> Path | None:
+    for up in [kernels_dir, *kernels_dir.parents]:
+        cand = up / "tests"
+        if cand.is_dir():
+            return cand
+    return None
+
+
+@register
+class KernelRefParity(Rule):
+    id = "kernel-ref-parity"
+    title = "every Pallas kernel has a ref.py twin and a parity test using both"
+    motivation = (
+        "the ref twin is the kernel's spec and its only CI coverage; the "
+        "onehot test compared against the WRONG twin for two PRs without "
+        "anything noticing"
+    )
+
+    def check_project(self, ctxs: Sequence[FileCtx]) -> Iterator[Finding]:
+        by_dir: Dict[Path, List[FileCtx]] = {}
+        for ctx in ctxs:
+            if "kernels" not in ctx.path.parts:
+                continue
+            if ctx.path.name in _SKIP_MODULES:
+                continue
+            if "pallas_call" not in ctx.source:
+                continue
+            kdir = ctx.path.parent
+            by_dir.setdefault(kdir, []).append(ctx)
+
+        for kdir, kernel_ctxs in sorted(by_dir.items()):
+            yield from self._check_dir(kdir, kernel_ctxs)
+
+    def _check_dir(self, kdir: Path, kernel_ctxs: List[FileCtx]) -> Iterator[Finding]:
+        ref_path = kdir / "ref.py"
+        ref_names: Set[str] = set()
+        if ref_path.is_file():
+            try:
+                ref_tree = ast.parse(ref_path.read_text())
+                ref_names = {d.name for d in _top_level_defs(ref_tree)}
+            except SyntaxError:
+                pass  # surfaced as parse-error when ref.py is in the run
+
+        tests_dir = _find_tests_dir(kdir)
+        test_text = ""
+        if tests_dir is not None:
+            for t in sorted(tests_dir.rglob("test*.py")):
+                try:
+                    test_text += t.read_text() + "\n"
+                except OSError:
+                    continue
+
+        for ctx in kernel_ctxs:
+            for fn in _top_level_defs(ctx.tree):
+                if fn.name.startswith("_"):
+                    continue
+                twin = _twin_name(fn.name)
+                if not ref_path.is_file():
+                    yield ctx.finding(
+                        self.id,
+                        fn,
+                        f"kernel {fn.name}() has no {ref_path.name} next to "
+                        "it; add a pure-jnp twin module",
+                    )
+                    continue
+                if twin not in ref_names:
+                    yield ctx.finding(
+                        self.id,
+                        fn,
+                        f"kernel {fn.name}() has no twin {twin}() in "
+                        f"{ref_path.name}; the ref implementation is the "
+                        "kernel's spec and its interpret-mode CI coverage",
+                    )
+                    continue
+                if fn.name.endswith("_shard"):
+                    continue  # parity is asserted through the base kernel
+                if tests_dir is None:
+                    yield ctx.finding(
+                        self.id,
+                        fn,
+                        f"no tests/ directory found above {kdir}; kernel "
+                        f"{fn.name}() needs a parity test against {twin}()",
+                    )
+                    continue
+                has_kernel = re.search(rf"\b{re.escape(fn.name)}\b", test_text)
+                has_twin = re.search(rf"\b{re.escape(twin)}\b", test_text)
+                if not (has_kernel and has_twin):
+                    missing = (
+                        f"{twin}()"
+                        if has_kernel
+                        else f"{fn.name}() and {twin}()"
+                    )
+                    yield ctx.finding(
+                        self.id,
+                        fn,
+                        f"no test under {tests_dir.name}/ references "
+                        f"{missing}; add a parity test asserting "
+                        f"{fn.name}() matches {twin}()",
+                    )

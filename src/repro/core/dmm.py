@@ -117,7 +117,7 @@ class MappingMatrix:
     updates -- that is the point of the paper.
     """
 
-    def __init__(self, registry: Registry, dense: Optional[np.ndarray] = None):
+    def __init__(self, registry: Registry, dense: Optional[np.ndarray] = None) -> None:
         self.registry = registry
         self.state = registry.state
         self.row_uids = registry.row_axis()  # q axis (CDM attributes iC)

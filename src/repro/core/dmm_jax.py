@@ -65,10 +65,11 @@ the fused path.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 import numpy as np
 
 from .dmm import DPM, BlockKey
@@ -147,7 +148,7 @@ class CompactedBlockMap:
 
 
 def compile_block(
-    key: BlockKey, elements, registry: Registry, lane: int = LANE
+    key: BlockKey, elements: Sequence, registry: Registry, lane: int = LANE
 ) -> CompactedBlockMap:
     """Lower one dense set ``{(q_uid, p_uid)}`` to an index vector."""
     o, v, r, w = key
@@ -341,7 +342,9 @@ def global_uid_tables(
     )
 
 
-def _fused_tables(compiled: CompiledDMM, registry: Registry, lane: int = LANE):
+def _fused_tables(
+    compiled: CompiledDMM, registry: Registry, lane: int = LANE
+) -> Tuple:
     """Host-side flattening shared by the replicated and sharded compiles.
 
     Returns ``(table, routes, n_out, columns, n_in_pad, width, n_blocks)``
@@ -509,7 +512,7 @@ def compile_fused_sharded(
     compiled: CompiledDMM,
     registry: Registry,
     *,
-    mesh=None,
+    mesh: Optional[Mesh] = None,
     n_shards: Optional[int] = None,
     axis: str = "data",
     lane: int = LANE,

@@ -84,7 +84,7 @@ class SchemaTree:
     layout is derived from this order.
     """
 
-    def __init__(self, root: str):
+    def __init__(self, root: str) -> None:
         self.root = root
         # {schema_id: {version: SchemaVersion}} with ordered dicts throughout.
         self._schemas: Dict[int, Dict[int, SchemaVersion]] = {}

@@ -82,7 +82,7 @@ class ClosureUpdate:
     op = "schema"
     replayable = False
 
-    def __init__(self, mutate: Callable[[Registry], Tuple[str, int, int]]):
+    def __init__(self, mutate: Callable[[Registry], Tuple[str, int, int]]) -> None:
         self._mutate = mutate
         self.trigger: Optional[Tuple[str, int, int]] = None
 
@@ -110,7 +110,7 @@ class StateCoordinator:
     be disabled".
     """
 
-    def __init__(self, registry: Registry, dpm: Optional[DPM] = None):
+    def __init__(self, registry: Registry, dpm: Optional[DPM] = None) -> None:
         self._lock = threading.Lock()
         self.registry = registry
         self._dpm: DPM = dict(dpm or {})

@@ -88,13 +88,13 @@ class Cluster:
         sinks: Sequence[RowSink],
         *,
         engine: Any = "fused",
-        mesh=None,
+        mesh: Any = None,
         impl: str = "ref",
         device_densify: bool = False,
         async_consume: bool = False,
         strict_state: bool = False,
         grid: Optional[tuple] = None,
-    ):
+    ) -> None:
         if not sources:
             raise ValueError("a cluster needs at least one source")
         if isinstance(engine, MappingEngine) and len(sources) > 1:

@@ -209,7 +209,7 @@ def _excl_cumsum(counts: np.ndarray) -> np.ndarray:
     return out
 
 
-def _segmented_arange(starts: np.ndarray, counts: np.ndarray):
+def _segmented_arange(starts: np.ndarray, counts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """Vectorised ``concatenate([arange(s, s + c) for s, c in ...])``.
 
     Returns ``(values, seg_of)``: the concatenated ranges plus, per output
@@ -225,7 +225,7 @@ def _segmented_arange(starts: np.ndarray, counts: np.ndarray):
     return values, seg_of
 
 
-def _event_items(chunk: ColumnarChunk, idx: np.ndarray):
+def _event_items(chunk: ColumnarChunk, idx: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """Vectorised CSR gather: the payload items of the selected events.
 
     Returns ``(ev_rows, item_idx)``: the flat positions (into ``chunk.uids``
@@ -254,7 +254,12 @@ def _uid_slots(lut: np.ndarray, uids: np.ndarray) -> np.ndarray:
     return np.where(valid, slots, np.int32(-1))
 
 
-def _count_unknown_uids(uid_col: np.ndarray, chunk, by_column, stats) -> None:
+def _count_unknown_uids(
+    uid_col: np.ndarray,
+    chunk: ColumnarChunk,
+    by_column: Dict[Tuple[int, int], np.ndarray],
+    stats: collections.Counter,
+) -> None:
     """Count payload items whose uid NO column of the current plan knows.
 
     Covers uids beyond the plan's dense-table range (an event racing ahead
@@ -371,7 +376,9 @@ class _ChunkLayout:
     out_keys: np.ndarray  # (S,) i64
 
 
-def _chunk_layout(plan, tri: TriagedChunk, stats=None) -> Optional[_ChunkLayout]:
+def _chunk_layout(
+    plan: Any, tri: TriagedChunk, stats: Optional[collections.Counter] = None
+) -> Optional[_ChunkLayout]:
     """Build the dense-row selection and (row, block) routing for a chunk.
 
     Fully vectorised: per-column work is two dict lookups (the (o, v) ->
@@ -421,7 +428,7 @@ def _chunk_layout(plan, tri: TriagedChunk, stats=None) -> Optional[_ChunkLayout]
     )
 
 
-def _densify_host(plan, layout: _ChunkLayout) -> DenseChunk:
+def _densify_host(plan: Any, layout: _ChunkLayout) -> DenseChunk:
     """Host-side densification of a laid-out chunk: one CSR gather
     (:func:`_event_items`), one resolve through the plan's global uid
     tables (the owner comparison reproduces the legacy per-column
@@ -466,7 +473,9 @@ def _densify_chunk(plan, groups, stats=None) -> Optional[DenseChunk]:
     return _densify_host(plan, layout)
 
 
-def _pack_columnar(layout: _ChunkLayout, rows_flat: np.ndarray, blks_flat: np.ndarray):
+def _pack_columnar(
+    layout: _ChunkLayout, rows_flat: np.ndarray, blks_flat: np.ndarray
+) -> Tuple[np.ndarray, Tuple[int, int, int, int]]:
     """Pack one chunk's device-densify operands into ONE flat int32 buffer
     (the :class:`ColumnarDense` layout).  Sections are bucketed to powers
     of two so the jit cache sees a handful of static shapes; float values
@@ -502,7 +511,7 @@ def _pack_columnar(layout: _ChunkLayout, rows_flat: np.ndarray, blks_flat: np.nd
     return p, ni_pad, b_pad, k
 
 
-def densify_chunk_dicts(plan, groups: Groups) -> Optional[DenseChunk]:
+def densify_chunk_dicts(plan: Any, groups: Groups) -> Optional[DenseChunk]:  # metl: allow[hot-path-python-loop] the pre-columnar oracle: deliberately per-event, kept as the correctness twin for densify_chunk
     """The pre-columnar densification: one python pass over every payload
     dict item per consume, resolved through the ``uid_pos`` dict.
 
@@ -590,7 +599,7 @@ class MappingEngine:
 
     name: str = "base"
 
-    def __init__(self, *, impl: str = "ref", stats: Optional[collections.Counter] = None):
+    def __init__(self, *, impl: str = "ref", stats: Optional[collections.Counter] = None) -> None:
         self.impl = impl
         self.stats = stats if stats is not None else collections.Counter()
         self.compiled: Optional[CompiledDMM] = None
@@ -601,7 +610,7 @@ class MappingEngine:
     def ready(self) -> bool:
         return self.plan is not None
 
-    def compile(self, snapshot: SystemState, registry: Registry):
+    def compile(self, snapshot: SystemState, registry: Registry) -> Any:
         """Build (and retain) the device plan for one state snapshot."""
         self.compiled = compile_dpm(snapshot.dpm, registry)
         self.plan = self._compile_plan(self.compiled, registry)
@@ -612,16 +621,16 @@ class MappingEngine:
         self.compiled = None
         self.plan = None
 
-    def _compile_plan(self, compiled: CompiledDMM, registry: Registry):
+    def _compile_plan(self, compiled: CompiledDMM, registry: Registry) -> Any:
         raise NotImplementedError
 
     # -- chunk stages --------------------------------------------------------
-    def densify(self, groups: Groups):
+    def densify(self, groups: Groups) -> Any:
         """Host-side densification; returns an engine-specific dense chunk
         or None when the chunk touches no mapping path."""
         raise NotImplementedError
 
-    def dispatch(self, dense) -> DispatchHandle:
+    def dispatch(self, dense: Any) -> DispatchHandle:
         """Launch the device work for one dense chunk WITHOUT blocking on
         it; increments ``stats['dispatches']`` once per launch."""
         raise NotImplementedError
@@ -671,7 +680,7 @@ class MappingEngine:
 ENGINES: Dict[str, Type[MappingEngine]] = {}
 
 
-def register_engine(name: str):
+def register_engine(name: str) -> Any:
     """Class decorator: register a :class:`MappingEngine` under ``name`` so
     ``METLApp(..., engine=name)`` resolves it through :func:`make_engine`."""
 
@@ -684,10 +693,10 @@ def register_engine(name: str):
 
 
 def make_engine(
-    engine="fused",
+    engine: Any = "fused",
     *,
     impl: str = "ref",
-    mesh=None,
+    mesh: Any = None,
     device_densify: bool = False,
     stats: Optional[collections.Counter] = None,
 ) -> MappingEngine:
@@ -780,8 +789,8 @@ class FusedEngine(MappingEngine):
         impl: str = "ref",
         device_densify: bool = False,
         min_device_events: int = 32,
-        stats=None,
-    ):
+        stats: Optional[collections.Counter] = None,
+    ) -> None:
         super().__init__(impl=impl, stats=stats)
         self.device_densify = device_densify
         self.min_device_events = min_device_events
@@ -789,7 +798,7 @@ class FusedEngine(MappingEngine):
     def _compile_plan(self, compiled: CompiledDMM, registry: Registry) -> FusedDMM:
         return compile_fused(compiled, registry)
 
-    def densify(self, groups: Groups):
+    def densify(self, groups: Groups) -> Any:
         tri = as_triaged(groups)
         if tri is None:
             return None
@@ -851,8 +860,8 @@ class FusedEngine(MappingEngine):
     def emit(self, handle: DispatchHandle) -> List[CanonicalRow]:
         dense = handle.dense
         s = dense.row_ids.size
-        ov = np.asarray(handle.outputs[0])[:s]  # the sync point
-        om = np.asarray(handle.outputs[1])[:s]
+        ov = np.asarray(handle.outputs[0])[:s]  # metl: allow[host-sync-in-hot-path] the engine sync point
+        om = np.asarray(handle.outputs[1])[:s]  # metl: allow[host-sync-in-hot-path] the engine sync point
         return _emit_rows(dense.plan, ov, om, dense.blk_ids, dense.out_keys, self.stats)
 
     def info(self) -> Dict[str, Any]:
@@ -890,9 +899,9 @@ class ShardedEngine(MappingEngine):
     pass in global (replicated-engine) order -- bit-exact with ``fused``."""
 
     def __init__(
-        self, *, mesh, impl: str = "ref", device_densify: bool = False,
-        min_device_events: int = 32, stats=None,
-    ):
+        self, *, mesh: Any, impl: str = "ref", device_densify: bool = False,
+        min_device_events: int = 32, stats: Optional[collections.Counter] = None,
+    ) -> None:
         super().__init__(impl=impl, stats=stats)
         if mesh is None:
             raise ValueError("engine='sharded' needs a mesh (make_etl_mesh)")
@@ -922,7 +931,7 @@ class ShardedEngine(MappingEngine):
             blks_sh[s, : len(idx)] = blk_ids[idx] - s * per
         return sel, rows_sh, blks_sh
 
-    def densify(self, groups: Groups):
+    def densify(self, groups: Groups) -> Any:
         tri = as_triaged(groups)
         if tri is None:
             return None
@@ -988,8 +997,8 @@ class ShardedEngine(MappingEngine):
         sh = dense.plan
         # all-gather: pull every shard's emitted dense rows to the host and
         # scatter them back to the global output order
-        ov = np.asarray(handle.outputs[0])
-        om = np.asarray(handle.outputs[1])
+        ov = np.asarray(handle.outputs[0])  # metl: allow[host-sync-in-hot-path] the engine sync point (all-gather)
+        om = np.asarray(handle.outputs[1])  # metl: allow[host-sync-in-hot-path] the engine sync point (all-gather)
         gv = np.zeros((dense.row_ids.size, sh.width), ov.dtype)
         gm = np.zeros((dense.row_ids.size, sh.width), om.dtype)
         for s, idx in enumerate(dense.shard_sel):
@@ -1041,7 +1050,7 @@ class BlocksEngine(MappingEngine):
     the column's true width instead of one fused payload tensor.
     """
 
-    def __init__(self, *, impl: str = "ref", stats=None):
+    def __init__(self, *, impl: str = "ref", stats: Optional[collections.Counter] = None) -> None:
         super().__init__(impl=impl, stats=stats)
         self._registry: Optional[Registry] = None
         self._luts: Dict[Tuple[int, int], np.ndarray] = {}
@@ -1097,7 +1106,7 @@ class BlocksEngine(MappingEngine):
     def emit(self, handle: DispatchHandle) -> List[CanonicalRow]:
         rows: List[CanonicalRow] = []
         for block, keys, ov, om in handle.outputs:
-            ov, om = np.asarray(ov), np.asarray(om)  # the sync point
+            ov, om = np.asarray(ov), np.asarray(om)  # metl: allow[host-sync-in-hot-path] the engine sync point
             r, w = block.key[2], block.key[3]
             for b in range(keys.size):
                 if om[b].any():  # only non-empty outgoing messages

@@ -207,7 +207,7 @@ class EventSource:
         p_stale: float = 0.0,
         p_update: float = 0.3,
         p_delete: float = 0.05,
-    ):
+    ) -> None:
         self.registry = registry
         self.seed = seed
         self.p_null = p_null
@@ -216,7 +216,9 @@ class EventSource:
         self.p_update = p_update
         self.p_delete = p_delete
 
-    def _payload(self, rng: np.random.Generator, schema_id: int, version: int):
+    def _payload(
+        self, rng: np.random.Generator, schema_id: int, version: int
+    ) -> Dict[int, Optional[float]]:
         sv = self.registry.domain.get(schema_id, version)
         return {
             a.uid: (None if rng.random() < self.p_null else float(rng.integers(1, 1_000_000)))

@@ -47,7 +47,7 @@ attributes (CI grep-gates ``app._`` outside this package).
 from __future__ import annotations
 
 import collections
-from typing import Dict, Iterable, List, Optional, Union
+from typing import Any, Dict, Iterable, List, Optional, Union
 
 import numpy as np
 
@@ -72,9 +72,9 @@ class METLApp:
         dedup_window: int = 4096,
         impl: str = "ref",
         engine: Union[str, MappingEngine] = "fused",
-        mesh=None,
+        mesh: Any = None,
         device_densify: bool = False,
-    ):
+    ) -> None:
         self.coordinator = coordinator
         self.strict_state = strict_state
         self.impl = impl

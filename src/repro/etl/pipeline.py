@@ -107,6 +107,7 @@ from __future__ import annotations
 import concurrent.futures
 import dataclasses
 from typing import (
+    Any,
     Callable,
     Dict,
     Iterator,
@@ -224,7 +225,7 @@ class EventChunkSource(Source):
         control: Optional[ControlSchedule] = None,
         stride: int = 1,
         offset: int = 0,
-    ):
+    ) -> None:
         if stride < 1 or not (0 <= offset < stride):
             raise ValueError(f"need stride >= 1 and 0 <= offset < stride, "
                              f"got stride={stride} offset={offset}")
@@ -294,7 +295,7 @@ class ListSource(Source):
     dead-letter replay re-delivers the same chunk objects deterministically
     (control items are never re-delivered: the rewind lands on data)."""
 
-    def __init__(self, chunks: Sequence[StreamItem]):
+    def __init__(self, chunks: Sequence[StreamItem]) -> None:
         self._chunks = list(chunks)
         self._cursor = 0
 
@@ -330,7 +331,7 @@ class ScriptedControlSource(Source):
     and :meth:`reset_offset` delegates to the inner source without
     re-arming them."""
 
-    def __init__(self, inner: Source, control: ControlSchedule):
+    def __init__(self, inner: Source, control: ControlSchedule) -> None:
         self.inner = inner
         self.control: ControlSchedule = dict(control)
         self._count = 0  # data chunks delivered through this wrapper
@@ -379,7 +380,7 @@ class RowSink:
 class TokenizerSink(RowSink):
     """Feeds the serve batcher: canonical rows -> token prompt lists."""
 
-    def __init__(self, vocab: int, *, max_len: int = 16, limit: Optional[int] = None):
+    def __init__(self, vocab: int, *, max_len: int = 16, limit: Optional[int] = None) -> None:
         self.vocab = vocab
         self.max_len = max_len
         self.limit = limit
@@ -422,7 +423,7 @@ class BatcherSink(RowSink):
     """Feeds a :class:`CanonicalBatcher`; full once a batch is ready, so
     ``pipeline.run()`` pulls exactly until the trainer can step."""
 
-    def __init__(self, batcher: CanonicalBatcher):
+    def __init__(self, batcher: CanonicalBatcher) -> None:
         self.batcher = batcher
 
     def write(self, rows: List[CanonicalRow]) -> None:
@@ -435,7 +436,7 @@ class BatcherSink(RowSink):
 class CollectSink(RowSink):
     """Plain accumulator (tests / benchmarks)."""
 
-    def __init__(self, limit: Optional[int] = None):
+    def __init__(self, limit: Optional[int] = None) -> None:
         self.rows: List[CanonicalRow] = []
         self.limit = limit
 
@@ -473,7 +474,7 @@ class Pipeline:
         async_consume: bool = False,
         densify_thread: bool = False,
         apply_control: Optional[Callable[[ControlEvent], None]] = None,
-    ):
+    ) -> None:
         self.source = source
         self.app = app
         self.sinks = list(sinks)
@@ -501,7 +502,7 @@ class Pipeline:
     def _full(self) -> bool:
         return any(sink.full() for sink in self.sinks)
 
-    def _prepare(self, chunk: List[CDCEvent]):
+    def _prepare(self, chunk: List[CDCEvent]) -> Any:
         """Triage + densify one chunk (the host-side half of consume)."""
         return self.app.engine.densify(self.app.triage(chunk))
 
@@ -587,7 +588,9 @@ class Pipeline:
     def _resolve(dense):
         return dense.result() if isinstance(dense, concurrent.futures.Future) else dense
 
-    def _account(self, st: PipelineStats, chunk, rows) -> None:
+    def _account(
+        self, st: PipelineStats, chunk: List[CDCEvent], rows: List[CanonicalRow]
+    ) -> None:
         st.chunks += 1
         st.events += len(chunk)
         st.rows += len(rows)

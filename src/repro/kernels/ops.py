@@ -21,6 +21,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
 from . import ref as _ref
 from .masked_gather import masked_gather as _masked_gather_kernel
@@ -142,7 +143,7 @@ def dmm_apply_fused(
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_program(mesh, axis: str, impl: str, fill: float):
+def _sharded_program(mesh: Mesh, axis: str, impl: str, fill: float):
     """One jitted shard_map program per (mesh, axis, impl, fill).
 
     The cache keeps the shard_map closure identity stable so the jit cache
@@ -345,7 +346,7 @@ def dmm_apply_columnar(
 
 
 @functools.lru_cache(maxsize=None)
-def _columnar_sharded_program(mesh, axis: str, impl: str, fill: float, donate: bool):
+def _columnar_sharded_program(mesh: Mesh, axis: str, impl: str, fill: float, donate: bool):
     """Sharded twin of :func:`_columnar_program`: the uid resolve runs
     replicated inside the same jit, then shard_map fans the per-shard
     routing and block-table slice out exactly like

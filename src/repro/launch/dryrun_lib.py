@@ -311,8 +311,18 @@ def run_cell(
             }
         res.model_flops_global = _model_flops(cfg, cell)
         res.ok = True
-    except Exception as e:  # a failure here is a bug in the system
+    except (TypeError, ValueError, RuntimeError, NotImplementedError) as e:
+        # expected compile-time failure modes (shape/sharding mismatches, OOM
+        # estimates, XlaRuntimeError is a RuntimeError): report per-cell
         res.error = f"{type(e).__name__}: {e}"
+    except Exception as e:
+        # anything else (KeyError, AttributeError, ...) is a bug in the dryrun
+        # harness itself -- surface it with the cell that triggered it instead
+        # of burying it in a per-cell error column
+        raise RuntimeError(
+            f"dryrun harness bug on {arch} {shape_name} mesh={mesh_name}: "
+            f"unexpected {type(e).__name__}: {e}"
+        ) from e
     res.seconds = time.time() - t0
     if verbose:
         status = "SKIP" if res.skipped else ("OK" if res.ok else "FAIL")

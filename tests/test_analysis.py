@@ -1,0 +1,590 @@
+"""repro.analysis: firing + clean-twin fixtures per rule, waiver semantics,
+the repo self-check, and the two mutation checks the grep gates used to
+carry (aliased app._fused reach-in; per-event dict walk in densify)."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import RULES, analyze
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _write(tmp_path: Path, rel: str, source: str) -> Path:
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(source)
+    return p
+
+
+def _rules_hit(report):
+    return {f.rule for f in report.findings}
+
+
+def _run(tmp_path, rel, source, **kw):
+    _write(tmp_path, rel, source)
+    return analyze([str(tmp_path)], **kw)
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_all_six_rules_registered():
+    import repro.analysis.rules  # noqa: F401
+
+    assert set(RULES) >= {
+        "private-reach-in",
+        "host-sync-in-hot-path",
+        "hot-path-python-loop",
+        "control-plane-purity",
+        "jit-cache-hygiene",
+        "kernel-ref-parity",
+    }
+
+
+# ---------------------------------------------------------- private-reach-in
+
+
+def test_private_reach_in_fires_on_direct_access(tmp_path):
+    rep = _run(
+        tmp_path,
+        "benchmarks/bench.py",
+        "app = METLApp(coord)\n"
+        "n = app._fused\n",
+    )
+    assert "private-reach-in" in _rules_hit(rep)
+
+
+def test_private_reach_in_fires_through_alias(tmp_path):
+    # the case the old grep could never see: no literal 'app._' survives
+    rep = _run(
+        tmp_path,
+        "benchmarks/bench.py",
+        "shadow = METLApp(coord)\n"
+        "mirror = shadow\n"
+        "x = mirror._fused\n",
+    )
+    hits = [f for f in rep.findings if f.rule == "private-reach-in"]
+    assert hits and "mirror._fused" in hits[0].message
+
+
+def test_private_reach_in_backstop_any_receiver(tmp_path):
+    # grep pattern 2 parity: known private names on an arbitrary receiver
+    rep = _run(tmp_path, "benchmarks/b.py", "x = thing._dedup_window\n")
+    assert "private-reach-in" in _rules_hit(rep)
+
+
+def test_private_reach_in_clean_twin(tmp_path):
+    rep = _run(
+        tmp_path,
+        "benchmarks/bench.py",
+        "app = METLApp(coord)\n"
+        "info = app.engine.info()\n"
+        "app.reset_dedup()\n",
+    )
+    assert "private-reach-in" not in _rules_hit(rep)
+
+
+def test_private_reach_in_exempt_inside_owner(tmp_path):
+    # the same access is legal from within repro.etl
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/helper.py",
+        "app = METLApp(coord)\n"
+        "n = app._fused\n",
+    )
+    assert "private-reach-in" not in _rules_hit(rep)
+
+
+def test_private_reach_in_ignores_strings_and_comments(tmp_path):
+    rep = _run(
+        tmp_path,
+        "benchmarks/doc.py",
+        '"""Docs mentioning app._fused and registry._state_id."""\n'
+        "# app._fused is private\n"
+        "x = 1\n",
+    )
+    assert "private-reach-in" not in _rules_hit(rep)
+
+
+def test_private_registry_reach_in(tmp_path):
+    rep = _run(
+        tmp_path,
+        "examples/demo.py",
+        "registry = Registry(root)\n"
+        "registry._state_id += 1\n",
+    )
+    assert "private-reach-in" in _rules_hit(rep)
+
+
+# ----------------------------------------------------- host-sync-in-hot-path
+
+
+_SYNC_FIRING = """\
+import numpy as np
+
+class Engine:
+    def dispatch(self, dense):
+        out = np.asarray(dense.vals)
+        return out
+"""
+
+_SYNC_CLEAN = """\
+import numpy as np
+
+class Engine:
+    def dispatch(self, dense):
+        return launch(dense)
+
+    def emit(self, handle):
+        ov = np.asarray(handle.outputs[0])  # metl: allow[host-sync-in-hot-path] the engine sync point
+        return ov
+"""
+
+
+def test_host_sync_fires_in_dispatch(tmp_path):
+    rep = _run(tmp_path, "src/repro/etl/e.py", _SYNC_FIRING)
+    assert "host-sync-in-hot-path" in _rules_hit(rep)
+
+
+def test_host_sync_clean_twin_with_annotated_emit(tmp_path):
+    rep = _run(tmp_path, "src/repro/etl/e.py", _SYNC_CLEAN)
+    assert "host-sync-in-hot-path" not in _rules_hit(rep)
+    assert any(f.rule == "host-sync-in-hot-path" for f, _ in rep.waived)
+
+
+def test_host_sync_unannotated_emit_fires(tmp_path):
+    src = _SYNC_CLEAN.replace(
+        "  # metl: allow[host-sync-in-hot-path] the engine sync point", ""
+    )
+    rep = _run(tmp_path, "src/repro/etl/e.py", src)
+    assert "host-sync-in-hot-path" in _rules_hit(rep)
+
+
+def test_host_sync_scalar_readback_in_dispatch(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/e.py",
+        "def dispatch(dense):\n"
+        "    s = float(dense.vals[0])\n"
+        "    return s\n",
+    )
+    assert "host-sync-in-hot-path" in _rules_hit(rep)
+
+
+def test_host_sync_out_of_scope_module(tmp_path):
+    # same code outside repro.etl / repro.kernels is not this rule's business
+    rep = _run(tmp_path, "scripts_dir/tool.py", _SYNC_FIRING)
+    assert "host-sync-in-hot-path" not in _rules_hit(rep)
+
+
+# ---------------------------------------------------- hot-path-python-loop
+
+
+def test_hot_loop_fires_on_per_event_loop(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/e.py",
+        "def densify_chunk(plan, evs):\n"
+        "    out = []\n"
+        "    for ev in evs:\n"
+        "        out.append(ev.key)\n"
+        "    return out\n",
+    )
+    assert "hot-path-python-loop" in _rules_hit(rep)
+
+
+def test_hot_loop_fires_on_payload_walk(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/e.py",
+        "def densify_chunk(plan, evs):\n"
+        "    return [ev.payload() for ev in evs]\n",
+    )
+    assert "hot-path-python-loop" in _rules_hit(rep)
+
+
+def test_hot_loop_clean_twin_per_column(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/e.py",
+        "def densify_chunk(plan, tri):\n"
+        "    return {ov: gather(idx) for ov, idx in tri.by_column.items()}\n",
+    )
+    assert "hot-path-python-loop" not in _rules_hit(rep)
+
+
+def test_hot_loop_mutation_dict_walk_in_densify_copy(tmp_path):
+    """ISSUE mutation check: re-introduce a per-event dict walk into a copy
+    of the real engines.py and the analyzer must flag it."""
+    src = (REPO / "src/repro/etl/engines.py").read_text()
+    src += (
+        "\n\ndef _densify_chunk(plan, evs):\n"
+        "    out = {}\n"
+        "    for ev in evs:\n"
+        "        for uid, val in ev.payload().items():\n"
+        "            out[uid] = val\n"
+        "    return out\n"
+    )
+    _write(tmp_path, "src/repro/etl/engines.py", src)
+    rep = analyze([str(tmp_path)], select=["hot-path-python-loop"])
+    assert not rep.ok
+    appended_at = src[: src.index("def _densify_chunk")].count("\n") + 1
+    assert any(f.line >= appended_at for f in rep.findings)
+
+
+def test_private_reach_in_mutation_alias_in_benchmarks(tmp_path):
+    """ISSUE mutation check: an aliased app._fused reach-in added to a
+    benchmarks file fails the analyzer (the old grep stayed green)."""
+    _write(
+        tmp_path,
+        "benchmarks/bench_new.py",
+        "from repro.etl.metl import METLApp\n"
+        "def run(coord):\n"
+        "    application = METLApp(coord)\n"
+        "    handle = application\n"
+        "    return handle._fused\n",
+    )
+    rep = analyze([str(tmp_path)], select=["private-reach-in"])
+    assert not rep.ok
+
+
+# --------------------------------------------------- control-plane-purity
+
+
+def test_control_purity_fires_outside_apply(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/x.py",
+        "def sneak(event, registry):\n"
+        "    event.mutate(registry)\n",
+    )
+    assert "control-plane-purity" in _rules_hit(rep)
+
+
+def test_control_purity_clean_in_coordinator_apply(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/core/state.py",
+        "class StateCoordinator:\n"
+        "    def apply(self, event):\n"
+        "        event.mutate(self.registry)\n",
+    )
+    assert "control-plane-purity" not in _rules_hit(rep)
+
+
+def test_control_purity_unfrozen_event_fires(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/control.py",
+        "import dataclasses\n"
+        "class ControlEvent:\n"
+        "    pass\n"
+        "class SchemaEvolved(ControlEvent):\n"
+        "    pass\n",
+    )
+    hits = [f for f in rep.findings if f.rule == "control-plane-purity"]
+    assert hits and "SchemaEvolved" in hits[0].message
+
+
+def test_control_purity_frozen_event_clean_and_transitive(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/control.py",
+        "import dataclasses\n"
+        "class ControlEvent:\n"
+        "    pass\n"
+        "@dataclasses.dataclass(frozen=True)\n"
+        "class SchemaEvolved(ControlEvent):\n"
+        "    schema_id: int\n"
+        "class Grandchild(SchemaEvolved):\n"  # transitively an event, unfrozen
+        "    pass\n",
+    )
+    hits = [f for f in rep.findings if f.rule == "control-plane-purity"]
+    assert len(hits) == 1 and "Grandchild" in hits[0].message
+
+
+# ----------------------------------------------------- jit-cache-hygiene
+
+
+_JIT_FIRING = """\
+import functools
+import jax
+
+@functools.lru_cache(maxsize=None)
+def _program(mesh, axis: str):
+    return jax.jit(lambda x: x)
+"""
+
+_JIT_CLEAN = """\
+import functools
+import jax
+from jax.sharding import Mesh
+
+@functools.lru_cache(maxsize=None)
+def _program(mesh: Mesh, axis: str, fill: float):
+    return jax.jit(lambda x: x)
+"""
+
+
+def test_jit_cache_fires_on_unannotated_param(tmp_path):
+    rep = _run(tmp_path, "src/repro/kernels/p.py", _JIT_FIRING)
+    hits = [f for f in rep.findings if f.rule == "jit-cache-hygiene"]
+    assert hits and "'mesh'" in hits[0].message
+
+
+def test_jit_cache_clean_twin(tmp_path):
+    rep = _run(tmp_path, "src/repro/kernels/p.py", _JIT_CLEAN)
+    assert "jit-cache-hygiene" not in _rules_hit(rep)
+
+
+def test_jit_cache_fires_on_array_annotation(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/kernels/p.py",
+        "import functools, jax\n"
+        "@functools.lru_cache(maxsize=None)\n"
+        "def _program(x: jax.Array):\n"
+        "    return jax.jit(lambda v: v)\n",
+    )
+    assert "jit-cache-hygiene" in _rules_hit(rep)
+
+
+def test_jit_cache_fires_on_star_args_and_list_call(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/kernels/p.py",
+        _JIT_CLEAN + "\nprog = _program([1, 2], 'data', 0.0)\n",
+    )
+    hits = [f for f in rep.findings if f.rule == "jit-cache-hygiene"]
+    assert hits and "unhashable literal" in hits[0].message
+
+
+def test_jit_cache_ignores_uncached_jit(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/kernels/p.py",
+        "import jax\n"
+        "def build(mesh):\n"
+        "    return jax.jit(lambda x: x)\n",
+    )
+    assert "jit-cache-hygiene" not in _rules_hit(rep)
+
+
+# ----------------------------------------------------- kernel-ref-parity
+
+
+_KERNEL = """\
+from jax.experimental import pallas as pl
+
+def my_map(x):
+    return pl.pallas_call(None)(x)
+"""
+
+
+def test_kernel_parity_fires_without_twin(tmp_path):
+    _write(tmp_path, "pkg/kernels/my_map.py", _KERNEL)
+    _write(tmp_path, "pkg/kernels/ref.py", "def other_ref(x):\n    return x\n")
+    (tmp_path / "tests").mkdir()
+    rep = analyze([str(tmp_path / "pkg")])
+    hits = [f for f in rep.findings if f.rule == "kernel-ref-parity"]
+    assert hits and "my_map_ref" in hits[0].message
+
+
+def test_kernel_parity_fires_without_parity_test(tmp_path):
+    _write(tmp_path, "pkg/kernels/my_map.py", _KERNEL)
+    _write(tmp_path, "pkg/kernels/ref.py", "def my_map_ref(x):\n    return x\n")
+    # a test that uses the kernel but never consults the twin (the onehot bug)
+    _write(tmp_path, "tests/test_k.py", "from pkg.kernels.my_map import my_map\n")
+    rep = analyze([str(tmp_path / "pkg")])
+    hits = [f for f in rep.findings if f.rule == "kernel-ref-parity"]
+    assert hits and "my_map_ref()" in hits[0].message
+
+
+def test_kernel_parity_clean_twin(tmp_path):
+    _write(tmp_path, "pkg/kernels/my_map.py", _KERNEL)
+    _write(tmp_path, "pkg/kernels/ref.py", "def my_map_ref(x):\n    return x\n")
+    _write(
+        tmp_path,
+        "tests/test_k.py",
+        "from pkg.kernels.my_map import my_map\n"
+        "from pkg.kernels.ref import my_map_ref\n"
+        "def test_parity():\n"
+        "    assert my_map(1) == my_map_ref(1)\n",
+    )
+    rep = analyze([str(tmp_path / "pkg")])
+    assert "kernel-ref-parity" not in _rules_hit(rep)
+
+
+def test_kernel_parity_shard_variant_covered_by_base(tmp_path):
+    _write(
+        tmp_path,
+        "pkg/kernels/my_map.py",
+        _KERNEL + "\ndef my_map_shard(x):\n    return my_map(x)\n",
+    )
+    _write(tmp_path, "pkg/kernels/ref.py", "def my_map_ref(x):\n    return x\n")
+    _write(
+        tmp_path,
+        "tests/test_k.py",
+        "from pkg.kernels.my_map import my_map\n"
+        "from pkg.kernels.ref import my_map_ref\n",
+    )
+    rep = analyze([str(tmp_path / "pkg")])
+    assert "kernel-ref-parity" not in _rules_hit(rep)
+
+
+# ------------------------------------------------------------- waivers
+
+
+def test_waiver_line_below(tmp_path):
+    rep = _run(
+        tmp_path,
+        "benchmarks/b.py",
+        "# metl: allow[private-reach-in] exercising the private shim on purpose\n"
+        "x = thing._fused\n",
+    )
+    assert rep.ok and rep.waived
+
+
+def test_waiver_on_def_covers_function(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/e.py",
+        "def densify_oracle(plan, evs):  # metl: allow[hot-path-python-loop] the oracle twin\n"
+        "    a = [ev.key for ev in evs]\n"
+        "    b = [ev.payload() for ev in evs]\n"
+        "    return a, b\n",
+    )
+    assert rep.ok and len(rep.waived) >= 2
+
+
+def test_waiver_does_not_leak_past_function(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/e.py",
+        "def densify_oracle(plan, evs):  # metl: allow[hot-path-python-loop] the oracle twin\n"
+        "    return [ev.key for ev in evs]\n"
+        "\n"
+        "def densify_other(plan, evs):\n"
+        "    return [ev.key for ev in evs]\n",
+    )
+    assert not rep.ok
+    assert all(f.line >= 4 for f in rep.findings)
+
+
+def test_waiver_without_reason_is_a_finding(tmp_path):
+    rep = _run(tmp_path, "benchmarks/b.py", "x = thing._fused  # metl: allow[private-reach-in]\n")
+    assert "bad-waiver" in _rules_hit(rep)
+
+
+def test_waiver_unknown_rule_is_a_finding(tmp_path):
+    rep = _run(tmp_path, "benchmarks/b.py", "x = 1  # metl: allow[no-such-rule] because\n")
+    assert "bad-waiver" in _rules_hit(rep)
+
+
+def test_waiver_only_covers_named_rule(tmp_path):
+    rep = _run(
+        tmp_path,
+        "benchmarks/b.py",
+        "x = thing._fused  # metl: allow[hot-path-python-loop] wrong rule named\n",
+    )
+    assert "private-reach-in" in _rules_hit(rep)
+
+
+def test_waiver_example_in_docstring_is_not_a_waiver(tmp_path):
+    rep = _run(
+        tmp_path,
+        "benchmarks/b.py",
+        '"""Waive with ``# metl: allow[rule-id] reason``."""\nx = 1\n',
+    )
+    assert rep.ok
+
+
+# ------------------------------------------------------- select / ignore
+
+
+def test_select_and_ignore(tmp_path):
+    _write(
+        tmp_path,
+        "src/repro/etl/e.py",
+        "import numpy as np\n"
+        "def dispatch(dense):\n"
+        "    return np.asarray(dense)\n"
+        "def densify_x(plan, evs):\n"
+        "    return [ev.key for ev in evs]\n",
+    )
+    both = analyze([str(tmp_path)])
+    assert _rules_hit(both) == {"host-sync-in-hot-path", "hot-path-python-loop"}
+    only = analyze([str(tmp_path)], select=["host-sync-in-hot-path"])
+    assert _rules_hit(only) == {"host-sync-in-hot-path"}
+    without = analyze([str(tmp_path)], ignore=["host-sync-in-hot-path"])
+    assert _rules_hit(without) == {"hot-path-python-loop"}
+    with pytest.raises(ValueError):
+        analyze([str(tmp_path)], select=["no-such-rule"])
+
+
+def test_parse_error_is_a_finding(tmp_path):
+    rep = _run(tmp_path, "benchmarks/b.py", "def broken(:\n")
+    assert "parse-error" in _rules_hit(rep)
+
+
+# ------------------------------------------------------------- self-check
+
+
+def test_repo_tree_is_clean():
+    """The shipped tree passes its own analyzer (what ci.sh asserts)."""
+    rep = analyze(
+        [str(REPO / "src"), str(REPO / "benchmarks"), str(REPO / "examples")]
+    )
+    assert rep.ok, "\n".join(f.render() for f in rep.findings)
+    # the deliberate engine sync points and the dict-walk oracle are waived,
+    # with reasons, not invisible
+    assert any(f.rule == "host-sync-in-hot-path" for f, _ in rep.waived)
+    assert any(f.rule == "hot-path-python-loop" for f, _ in rep.waived)
+    assert all(w.reason for _, w in rep.waived)
+
+
+# ------------------------------------------------------------------- CLI
+
+
+def _cli(*args, cwd=None):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True,
+        text=True,
+        cwd=cwd or REPO,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+    )
+
+
+def test_cli_clean_tree_exits_zero_and_writes_report(tmp_path):
+    report_file = tmp_path / "ANALYSIS.json"
+    proc = _cli("src", "benchmarks", "examples", "--output", "json",
+                "--report", str(report_file))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(proc.stdout)
+    assert payload["ok"] is True and payload["n_files"] > 50
+    assert json.loads(report_file.read_text())["ok"] is True
+
+
+def test_cli_findings_exit_one(tmp_path):
+    _write(tmp_path, "benchmarks/b.py", "x = thing._fused\n")
+    proc = _cli(str(tmp_path))
+    assert proc.returncode == 1
+    assert "[private-reach-in]" in proc.stdout
+
+
+def test_cli_usage_errors_exit_two(tmp_path):
+    assert _cli().returncode == 2
+    assert _cli(str(tmp_path), "--select", "no-such-rule").returncode == 2
+
+
+def test_cli_list_rules():
+    proc = _cli("--list-rules")
+    assert proc.returncode == 0
+    for rid in RULES or ["private-reach-in"]:
+        assert rid in proc.stdout

@@ -9,6 +9,7 @@ from repro.kernels import ref
 from repro.kernels.masked_gather import masked_gather
 from repro.kernels.moe_combine import moe_combine
 from repro.kernels.onehot_map import onehot_map
+from repro.kernels.segmented_gather import segmented_gather
 
 
 def _mk_case(rng, b, n_in, n_out, density, dtype):
@@ -52,10 +53,31 @@ def test_masked_gather_matches_oracle(b, n_in, n_out, dtype, density):
 def test_onehot_map_matches_oracle(b, n_in, n_out, density):
     rng = np.random.default_rng(hash((b, n_in, n_out, density, 1)) % 2**31)
     vals, mask, src = _mk_case(rng, b, n_in, n_out, density, np.float32)
-    rv, rm = ref.masked_gather_ref(vals, mask, src)
+    rv, rm = ref.onehot_map_ref(vals, mask, src)
     ov, om = onehot_map(vals, mask, src, interpret=True)
     np.testing.assert_allclose(np.asarray(rv), np.asarray(ov), atol=1e-5)
     assert np.array_equal(np.asarray(rm), np.asarray(om))
+
+
+@pytest.mark.parametrize("b,n_in,w", [(8, 64, 128), (37, 300, 256), (64, 128, 128)])
+@pytest.mark.parametrize("n_blocks,s", [(8, 16), (16, 130)])
+def test_segmented_gather_matches_oracle(b, n_in, w, n_blocks, s):
+    rng = np.random.default_rng(hash((b, n_in, w, n_blocks, s)) % 2**31)
+    vals = jnp.asarray(rng.normal(size=(b, n_in)).astype(np.float32))
+    mask = jnp.asarray((rng.random((b, n_in)) < 0.7).astype(np.int8))
+    src2d = np.full((n_blocks, w), -1, np.int32)
+    for blk in range(n_blocks):
+        k = int(0.5 * min(n_in, w))
+        src2d[blk, rng.choice(w, size=k, replace=False)] = rng.choice(
+            n_in, size=k, replace=False
+        )
+    src2d = jnp.asarray(src2d)
+    rows = jnp.asarray(rng.integers(b, size=s).astype(np.int32))
+    blks = jnp.asarray(rng.integers(n_blocks, size=s).astype(np.int32))
+    rv, rm = ref.segmented_gather_ref(vals, mask, rows, blks, src2d, fill=0.25)
+    gv, gm = segmented_gather(vals, mask, rows, blks, src2d, fill=0.25, interpret=True)
+    np.testing.assert_allclose(np.asarray(rv), np.asarray(gv), atol=1e-6)
+    assert np.array_equal(np.asarray(rm), np.asarray(gm))
 
 
 @pytest.mark.parametrize(
