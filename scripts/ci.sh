@@ -4,20 +4,37 @@
 #     bash scripts/ci.sh
 #
 # 1. the static invariant analyzer (python -m repro.analysis) over
-#    src/benchmarks/examples: six AST rules replacing the old git-grep
-#    hygiene gates -- private-reach-in (no private METLApp/engine/Registry
-#    access outside repro.etl / repro.core, alias-aware),
-#    host-sync-in-hot-path (dispatch stays unblocked; emit's sync points
-#    are annotated), hot-path-python-loop (no per-event loops/payload
-#    walks in densify/dispatch), control-plane-purity (mutate() only in
-#    StateCoordinator.apply; frozen ControlEvents), jit-cache-hygiene
-#    (lru_cache'd jit builders take hashable annotated args), and
-#    kernel-ref-parity (every Pallas kernel has a ref.py twin plus a
-#    parity test).  The JSON report is written next to the bench artifact
-#    (ANALYSIS.json).  Waivers are inline '# metl: allow[rule-id] reason'
-#    comments; a reasonless waiver fails the gate;
-# 2. a mypy pass (mypy.ini: repro.etl + repro.core, basic strictness) when
-#    mypy is importable; skipped with a notice on the bare jax container;
+#    src/benchmarks/examples: twelve rules on a whole-program project
+#    model (src/repro/analysis/project.py: import-aware symbol
+#    resolution, an approximate call graph, hot-path reachability, and a
+#    donate_argnums dataflow map).  The per-file rules -- private-reach-in
+#    (no private METLApp/engine/Registry access outside repro.etl /
+#    repro.core, alias- and import-aware), host-sync-in-hot-path
+#    (dispatch and everything it reaches stays unblocked; emit's sync
+#    points are annotated), hot-path-python-loop (no per-event
+#    loops/payload walks anywhere reachable from densify/dispatch/
+#    consume), control-plane-purity (mutate() only in
+#    StateCoordinator.apply or its private helpers; frozen
+#    ControlEvents), jit-cache-hygiene, kernel-ref-parity -- plus the
+#    cross-module rules: donated-buffer-reuse (no read of a buffer after
+#    it is donated to a jit program; donation is a no-op on CPU CI, so
+#    only this gate sees the TPU/GPU corruption), single-writer-control
+#    (only StateCoordinator.apply writes control_log/coordinator state),
+#    epoch-pin-escape (DenseChunk/ColumnarDense always carry their plan
+#    pin; no plan read through a chunk across a coordinator mutation),
+#    transfer-accounting (host->device conversions on the per-chunk path
+#    only at the accounted _to_device site), and the waiver audits
+#    (bad-waiver, unused-waiver).  Findings render as ::error GitHub
+#    annotations in CI logs; the JSON report is written next to the bench
+#    artifact (ANALYSIS.json).  Waivers are inline '# metl:
+#    allow[rule-id] reason' comments; a reasonless or stale waiver fails
+#    the gate.  A second, scoped sweep covers tests/ (private-reach-in +
+#    waiver audits: test files may exercise internals via their own
+#    waived shim lines but not silently grow private couplings);
+# 2. a mypy pass (mypy.ini: repro.etl + repro.core + repro.kernels +
+#    repro.analysis, basic strictness; version pinned in
+#    requirements-dev.txt) when mypy is importable; skipped with a notice
+#    on the bare jax container;
 # 3. the FULL test suite with zero tolerated failures -- includes the
 #    tier-1 set (ROADMAP.md), the multi-device subprocess tests, the
 #    sharded-vs-replicated fused-consume parity tests, and the analyzer's
@@ -61,18 +78,23 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 BENCH_DIR="$(mktemp -d)"
 trap 'rm -rf "$BENCH_DIR"' EXIT
 
-echo "== static invariant analyzer (repro.analysis, 6 rules) =="
+echo "== static invariant analyzer (repro.analysis, project model) =="
+# --output github: findings render as ::error annotations (no-ops in a
+# plain terminal, overlaid on the diff under GitHub Actions); --report
+# keeps the machine-readable JSON next to the bench artifact either way
 python -m repro.analysis src benchmarks examples \
-    --output json --report "$BENCH_DIR/ANALYSIS.json" > /dev/null || {
-  echo "FAIL: analyzer findings (rerun without --output json for detail):" >&2
-  python -m repro.analysis src benchmarks examples >&2 || true
-  exit 1
-}
-python -m repro.analysis src benchmarks examples | tail -n 1
+    --output github --report "$BENCH_DIR/ANALYSIS.json"
 
-echo "== mypy (repro.etl + repro.core, mypy.ini) =="
+echo "== analyzer: tests/ sweep (private-reach-in + waiver audits) =="
+# scoped: test files deliberately poke internals through waived shim
+# lines, but new private couplings and stale waivers must not creep in
+python -m repro.analysis tests \
+    --select private-reach-in,bad-waiver,unused-waiver --output github
+
+echo "== mypy (etl + core + kernels + analysis, mypy.ini) =="
 if python -c "import mypy" 2>/dev/null; then
-  python -m mypy --config-file mypy.ini src/repro/etl src/repro/core
+  python -m mypy --config-file mypy.ini \
+      src/repro/etl src/repro/core src/repro/kernels src/repro/analysis
 else
   echo "skipped: mypy not installed (pip install -r requirements-dev.txt)"
 fi

@@ -50,11 +50,42 @@ The rule catalog (see docs/analysis.md for the long-form version):
     ``kernels/ref.py`` and a test that references both the kernel and its
     twin.  Motivation: the onehot test compared against the wrong twin.
 
+The cross-module rules ride the whole-program model in
+:mod:`repro.analysis.project` (import-aware symbol resolution, an
+approximate call graph, hot-path reachability, and a ``donate_argnums``
+dataflow map, built ONCE per run):
+
+``donated-buffer-reuse``
+    No read of a buffer after it was passed in a donated position of a
+    jitted program.  Motivation: ``donate_argnums`` is a no-op on the CPU
+    CI backend -- a reuse passes every test and corrupts on TPU/GPU
+    (PR 6's device-densify contract).
+
+``single-writer-control``
+    Only ``StateCoordinator.apply`` (resolved through wrappers via the
+    call graph) may append to ``control_log`` or mutate coordinator
+    state.  Motivation: PR 5's bit-exact control-log replay has exactly
+    one writer.
+
+``epoch-pin-escape``
+    Every ``DenseChunk``/``ColumnarDense`` construction carries its
+    ``plan=`` epoch pin, and no ``.plan`` read through a chunk crosses a
+    coordinator mutation in the same scope.  Motivation: PR 5's
+    epoch-transition contract -- an unpinned in-flight chunk maps rows
+    with the wrong epoch's plan.
+
+``transfer-accounting``
+    No host->device conversion reachable from the per-chunk dispatch
+    path outside the single waived ``_to_device`` site in ``engines.py``.
+    Motivation: PR 6's one-transfer-per-chunk contract, enforced by
+    reachability instead of by whichever configurations the bench runs.
+
 Waivers: append ``# metl: allow[rule-id] reason`` to the offending line
 (or the line above as a standalone comment; on a ``def`` line it covers
 the whole function).  The reason is mandatory -- a reasonless waiver or an
-unknown rule id is itself a finding (``bad-waiver``) that cannot be
-waived.
+unknown rule id is itself a finding (``bad-waiver``), a well-formed
+waiver that suppresses nothing is ``unused-waiver``, and neither audit
+finding can be waived.
 """
 
 from .core import (  # noqa: F401
@@ -68,15 +99,18 @@ from .core import (  # noqa: F401
     collect_files,
     register,
 )
+from .project import Project, as_project  # noqa: F401
 
 __all__ = [
     "Finding",
     "FileCtx",
+    "Project",
     "Report",
     "Rule",
     "RULES",
     "Waiver",
     "analyze",
+    "as_project",
     "collect_files",
     "register",
 ]

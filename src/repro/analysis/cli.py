@@ -5,7 +5,7 @@ from __future__ import annotations
 import argparse
 import json
 import sys
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, TextIO
 
 from .core import RULES, Report, analyze
 
@@ -16,7 +16,30 @@ def _split(v: Optional[str]) -> Optional[List[str]]:
     return [s.strip() for s in v.split(",") if s.strip()]
 
 
-def _render_text(report: Report, out) -> None:
+def _render_github(report: Report, out: TextIO) -> None:
+    """GitHub Actions workflow-command annotations: each finding renders as
+    an ``::error`` line that CI overlays on the diff at file:line.  The
+    trailing plain-text summary line is NOT a workflow command, so it shows
+    in the raw log without extra annotations.  Exit codes are unchanged
+    (0 clean / 1 findings / 2 usage error)."""
+    for f in report.findings:
+        # messages must be single-line for the workflow-command grammar
+        msg = f.message.replace("\n", " ")
+        print(
+            f"::error file={f.path},line={f.line},col={f.col},"
+            f"title=repro.analysis[{f.rule}]::{msg}",
+            file=out,
+        )
+    status = "OK" if report.ok else f"{len(report.findings)} finding(s)"
+    print(
+        f"repro.analysis: {status} "
+        f"({report.n_files} files, {len(report.rules)} rules, "
+        f"{len(report.waived)} waived)",
+        file=out,
+    )
+
+
+def _render_text(report: Report, out: TextIO) -> None:
     for f in report.findings:
         print(f.render(), file=out)
     if report.waived:
@@ -45,8 +68,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         "--ignore", metavar="IDS", help="comma-separated rule ids to skip"
     )
     parser.add_argument(
-        "--output", choices=("text", "json"), default="text",
-        help="stdout format (default: text)",
+        "--output", choices=("text", "json", "github"), default="text",
+        help="stdout format (default: text); 'github' emits "
+        "::error workflow-command annotations for CI logs",
     )
     parser.add_argument(
         "--report", metavar="FILE",
@@ -85,6 +109,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if args.output == "json":
         json.dump(report.as_dict(), sys.stdout, indent=2)
         print()
+    elif args.output == "github":
+        _render_github(report, sys.stdout)
     else:
         _render_text(report, sys.stdout)
     return 0 if report.ok else 1

@@ -83,13 +83,16 @@ class Waiver:
 class FileCtx:
     """One parsed source file, shared by every rule."""
 
-    def __init__(self, path: Path, rel: str, source: str, tree: ast.Module):
+    def __init__(self, path: Path, rel: str, source: str, tree: ast.Module) -> None:
         self.path = path
         self.rel = rel
         self.source = source
         self.lines = source.splitlines()
         self.tree = tree
         self.waivers: List[Waiver] = []
+        # the owning repro.analysis.project.Module once a Project is built
+        # over this file set (set by Project.__init__; None for a bare ctx)
+        self.module: Optional[object] = None
         self._func_spans = _function_spans(tree)
         self._parse_waivers()
 
@@ -306,6 +309,8 @@ def analyze(
             raw.append(err)
             continue
         ctxs.append(ctx)
+        if "bad-waiver" not in rule_ids:
+            continue
         for w in ctx.waivers:
             if not w.reason:
                 raw.append(
@@ -332,21 +337,65 @@ def analyze(
                         )
                     )
 
+    # the whole-program model, built ONCE per run; rules receive it as their
+    # check_project argument (it is Sequence[FileCtx]-compatible) and every
+    # ctx gets its .module set for import-aware per-file rules
+    from .project import Project
+
+    project = Project(ctxs)
+
     by_rel = {ctx.rel: ctx for ctx in ctxs}
     for rule in active:
         for ctx in ctxs:
             raw.extend(rule.check_file(ctx))
-        raw.extend(rule.check_project(ctxs))
+        raw.extend(rule.check_project(project))
 
+    # bad-waiver (and the post-hoc unused-waiver below) are unwaivable: the
+    # waiver machinery can't excuse its own misuse
+    _UNWAIVABLE = {"bad-waiver", "unused-waiver"}
     findings: List[Finding] = []
     waived: List[Tuple[Finding, Waiver]] = []
+    used_waivers: set = set()
     for f in sorted(raw, key=lambda f: (f.path, f.line, f.col, f.rule)):
         ctx = by_rel.get(f.path)
-        w = ctx.waived(f) if ctx is not None and f.rule != "bad-waiver" else None
+        if ctx is not None and f.rule not in _UNWAIVABLE:
+            # usage is any-cover: a waiver "suppresses something" when any
+            # raw finding falls in its span, even if an earlier overlapping
+            # waiver claimed the finding first
+            for w in ctx.waivers:
+                if w.covers(f.rule, f.line):
+                    used_waivers.add((ctx.rel, w.line, w.rules))
+        w = ctx.waived(f) if ctx is not None and f.rule not in _UNWAIVABLE else None
         if w is not None:
             waived.append((f, w))
         else:
             findings.append(f)
+
+    if "unused-waiver" in rule_ids:
+        selected = set(rule_ids)
+        for ctx in ctxs:
+            for w in ctx.waivers:
+                if not w.reason or any(r not in RULES for r in w.rules):
+                    continue  # already a bad-waiver finding
+                if not set(w.rules) <= selected:
+                    continue  # a named rule didn't run: can't judge usage
+                if (ctx.rel, w.line, w.rules) in used_waivers:
+                    continue
+                findings.append(
+                    Finding(
+                        rule="unused-waiver",
+                        path=ctx.rel,
+                        line=w.line,
+                        col=1,
+                        message=(
+                            f"waiver for {', '.join(w.rules)} suppresses "
+                            "nothing -- the code it excused is gone; "
+                            "delete the comment"
+                        ),
+                    )
+                )
+        findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+
     return Report(
         paths=list(paths),
         rules=rule_ids,

@@ -1,0 +1,490 @@
+"""The whole-program model: import resolution, call graph, reachability,
+buffer-donation dataflow.
+
+PR 7's rules were per-file AST checks, which means every cross-module
+contract -- the single-writer coordinator, epoch-pinned in-flight chunks,
+``donate_argnums`` buffer donation that is a **no-op on the CPU CI
+backend** -- was enforced only where a hard-coded function name happened to
+match.  :class:`Project` gives rules the three whole-program facts those
+contracts need:
+
+  * **symbol resolution** through the module graph -- every analyzed file
+    becomes a :class:`Module` with an import table, so ``from ..kernels.ops
+    import dmm_apply_columnar as X; X(...)`` resolves to the same function
+    as the direct call;
+  * an **approximate call graph** -- call edges resolve by import-aware
+    qualified name first, then fall back to bare-name matching for
+    attribute calls (``self.engine.dispatch(...)`` links to every known
+    ``dispatch``).  Deliberately an over-approximation: reachability-scoped
+    rules would rather scan one extra function than miss the hot path
+    through a wrapper;
+  * **reachability sets** -- :meth:`Project.reachable` (transitive callees
+    of a seed set) and the derived :meth:`Project.hot_path` (everything
+    reachable from engine ``densify``/``dispatch``/``consume``), replacing
+    the hard-coded name scoping in ``hot_loop.py`` / ``host_sync.py``; and
+    :meth:`Project.only_called_from`, the caller-side dual used to resolve
+    wrappers of ``StateCoordinator.apply``;
+  * the **donation map** -- functions returning ``jax.jit(...,
+    donate_argnums=...)`` programs are donation *factories*; wrappers that
+    pass a parameter into a factory program's donated position donate that
+    parameter in turn (``ops.dmm_apply_columnar`` donates ``packed``).
+    :mod:`repro.analysis.rules.donated_buffer` flags reads after the
+    donated call.
+
+``Project`` is itself a ``Sequence[FileCtx]``, so every pre-existing
+``check_project(ctxs)`` implementation (kernel-ref-parity) keeps working
+unchanged; rules that need the model call :func:`as_project` (a no-op for
+the instance :func:`repro.analysis.core.analyze` builds ONCE per run).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import (
+    Dict,
+    Iterable,
+    Iterator,
+    List,
+    Optional,
+    Sequence,
+    Set,
+    Tuple,
+)
+
+from .core import FileCtx
+
+__all__ = [
+    "attr_chain",
+    "as_project",
+    "module_name",
+    "FunctionInfo",
+    "Module",
+    "Project",
+]
+
+
+def attr_chain(node: ast.expr) -> Optional[str]:
+    """The dotted source chain of a Name/Attribute tree (``a.b.c``), or None
+    when any link is a call/subscript/literal -- the currency of the
+    dataflow rules (chains compare textually)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def module_name(ctx: FileCtx) -> str:
+    """Dotted module name for one analyzed file.
+
+    Everything after the LAST ``src`` path component when present (so a
+    tmp-dir fixture tree ``/tmp/x/src/repro/etl/e.py`` names ``repro.etl.e``
+    exactly like the real one), otherwise every path component -- enough for
+    repo-relative ``benchmarks/run.py`` -> ``benchmarks.run``.
+    """
+    parts = [p for p in ctx.path.parts if p not in ("/", "\\")]
+    if "src" in parts:
+        parts = parts[len(parts) - parts[::-1].index("src") :]
+    if parts and parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][: -len(".py")]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+class FunctionInfo:
+    """One function or method definition in the analyzed set."""
+
+    def __init__(
+        self,
+        qname: str,
+        module: "Module",
+        node: ast.FunctionDef,
+        cls: Optional[str],
+    ) -> None:
+        self.qname = qname
+        self.name = node.name
+        self.cls = cls
+        self.module = module
+        self.node = node
+        # donated positional-arg positions -> parameter name (filled by the
+        # donation fixpoint; empty for non-donating functions)
+        self.donates: Dict[int, str] = {}
+
+    @property
+    def ctx(self) -> FileCtx:
+        return self.module.ctx
+
+    def params(self) -> List[str]:
+        a = self.node.args
+        return [p.arg for p in a.posonlyargs + a.args]
+
+    def __repr__(self) -> str:
+        return f"FunctionInfo({self.qname})"
+
+
+class Module:
+    """One analyzed file as a module: import table + owned definitions."""
+
+    def __init__(self, ctx: FileCtx) -> None:
+        self.ctx = ctx
+        self.name = module_name(ctx)
+        self.is_package = ctx.path.name == "__init__.py"
+        self.imports: Dict[str, str] = {}  # local name -> imported qname
+        self.top_level: Set[str] = set()  # top-level def/class names
+        self._parse_imports()
+
+    def _parse_imports(self) -> None:
+        for node in ast.walk(self.ctx.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.asname:
+                        self.imports[alias.asname] = alias.name
+                    else:
+                        # `import a.b.c` binds only the root name `a`
+                        root = alias.name.split(".")[0]
+                        self.imports[root] = root
+            elif isinstance(node, ast.ImportFrom):
+                base = node.module or ""
+                if node.level:
+                    # relative import: level 1 is the containing package --
+                    # which for an __init__.py is the module name itself
+                    up = node.level - 1 if self.is_package else node.level
+                    parts = self.name.split(".")
+                    anchor = parts[: len(parts) - up] if up else parts
+                    base = ".".join(anchor + ([node.module] if node.module else []))
+                for alias in node.names:
+                    if alias.name == "*":
+                        continue
+                    local = alias.asname or alias.name
+                    self.imports[local] = f"{base}.{alias.name}" if base else alias.name
+
+    def resolve(self, chain: str) -> Optional[str]:
+        """Resolve a dotted source chain to a qualified name through this
+        module's imports and top-level definitions, or None."""
+        head, _, rest = chain.partition(".")
+        if head in self.imports:
+            base = self.imports[head]
+            return f"{base}.{rest}" if rest else base
+        if head in self.top_level:
+            return f"{self.name}.{chain}" if self.name else chain
+        return None
+
+
+class _DefCollector(ast.NodeVisitor):
+    """Collect every function/method of a module with its class context."""
+
+    def __init__(self, module: Module, out: Dict[str, FunctionInfo]) -> None:
+        self.module = module
+        self.out = out
+        self._cls: Optional[str] = None
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.module.top_level.add(node.name)
+        prev, self._cls = self._cls, node.name
+        for child in node.body:
+            self.visit(child)
+        self._cls = prev
+
+    def _visit_def(self, node: ast.FunctionDef) -> None:
+        # function bodies are not descended into: nested defs (kernel
+        # closures) are not separate functions in the model -- ast.walk over
+        # the owner's node attributes their statements and call edges to the
+        # enclosing function
+        if self._cls is None:
+            self.module.top_level.add(node.name)
+        parts = [self.module.name] if self.module.name else []
+        if self._cls:
+            parts.append(self._cls)
+        parts.append(node.name)
+        qname = ".".join(parts)
+        self.out[qname] = FunctionInfo(qname, self.module, node, self._cls)
+
+    visit_FunctionDef = _visit_def
+    visit_AsyncFunctionDef = _visit_def  # type: ignore[assignment]
+
+
+def _jit_donated_positions(call: ast.Call, module: Module) -> Tuple[int, ...]:
+    """Donated arg positions of a ``jax.jit(..., donate_argnums=...)`` call
+    (empty when the call is not a donating jit).  Conditional donation
+    (``(0,) if donate else ()`` -- the CPU-CI-invisible case) counts as
+    donating: that is the whole point of the rule."""
+    fn = call.func
+    chain = attr_chain(fn)
+    is_jit = False
+    if chain is not None:
+        resolved = module.resolve(chain) or chain
+        is_jit = resolved in ("jax.jit", "jit") or resolved.endswith(".jit")
+    if not is_jit:
+        return ()
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            return tuple(
+                sorted(
+                    {
+                        n.value
+                        for n in ast.walk(kw.value)
+                        if isinstance(n, ast.Constant) and isinstance(n.value, int)
+                        and not isinstance(n.value, bool)
+                    }
+                )
+            )
+    return ()
+
+
+class Project(Sequence[FileCtx]):
+    """The whole-program model over one analyzer run's file set.
+
+    Sequence protocol: iterating/indexing a Project yields its
+    :class:`FileCtx` objects, so legacy ``check_project(ctxs)``
+    implementations run unmodified.
+    """
+
+    def __init__(self, ctxs: Sequence[FileCtx]) -> None:
+        self._ctxs = list(ctxs)
+        self.modules: Dict[str, Module] = {}
+        self.functions: Dict[str, FunctionInfo] = {}
+        self.by_name: Dict[str, List[FunctionInfo]] = {}
+        self.calls: Dict[str, Set[str]] = {}
+        self.callers: Dict[str, Set[str]] = {}
+        self._hot: Optional[Set[str]] = None
+        for ctx in self._ctxs:
+            mod = Module(ctx)
+            self.modules[mod.name] = mod
+            ctx.module = mod
+            _DefCollector(mod, self.functions).visit(ctx.tree)
+        for info in self.functions.values():
+            self.by_name.setdefault(info.name, []).append(info)
+        self._build_call_graph()
+        self._build_donation_map()
+
+    # -- Sequence[FileCtx] ----------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._ctxs)
+
+    def __getitem__(self, i: int) -> FileCtx:  # type: ignore[override]
+        return self._ctxs[i]
+
+    def __iter__(self) -> Iterator[FileCtx]:
+        return iter(self._ctxs)
+
+    # -- call graph -----------------------------------------------------------
+    def _callees_of(self, info: FunctionInfo) -> Set[str]:
+        out: Set[str] = set()
+        for node in ast.walk(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            out.update(t.qname for t in self.resolve_call(info.module, node.func))
+        return out
+
+    def resolve_call(
+        self, module: Module, func: ast.expr
+    ) -> List[FunctionInfo]:
+        """Candidate targets of one call expression.
+
+        A chain that resolves through the module's imports/definitions to a
+        known function (or a known class -- then its ``__init__``) is an
+        exact edge; an unresolved attribute call falls back to every known
+        function with the same bare name (over-approximate by design).
+        """
+        chain = attr_chain(func)
+        if chain is None:
+            return []
+        qname = module.resolve(chain)
+        if qname is not None:
+            if qname in self.functions:
+                return [self.functions[qname]]
+            if f"{qname}.__init__" in self.functions:
+                return [self.functions[f"{qname}.__init__"]]
+            # imported-but-unanalyzed symbol: name-match on the RESOLVED tail
+            # (`from ops import dmm_apply_columnar as X` still finds every
+            # known dmm_apply_columnar even when `ops` isn't in the file set)
+            return list(self.by_name.get(qname.rsplit(".", 1)[-1], []))
+        if "." in chain:
+            # unresolved attribute call (self.engine.dispatch): every known
+            # function with the same bare name
+            return list(self.by_name.get(chain.rsplit(".", 1)[-1], []))
+        # a bare name that resolved nowhere is a local variable or builtin
+        return []
+
+    def _build_call_graph(self) -> None:
+        for qname, info in self.functions.items():
+            callees = self._callees_of(info)
+            callees.discard(qname)
+            self.calls[qname] = callees
+            for c in callees:
+                self.callers.setdefault(c, set()).add(qname)
+
+    # -- reachability ---------------------------------------------------------
+    def reachable(self, seeds: Iterable[str]) -> Set[str]:
+        """Seeds plus every transitive callee (qualified names)."""
+        seen: Set[str] = set()
+        stack = [s for s in seeds if s in self.functions]
+        while stack:
+            q = stack.pop()
+            if q in seen:
+                continue
+            seen.add(q)
+            stack.extend(self.calls.get(q, ()))
+        return seen
+
+    def seeds_matching(
+        self, pattern: "re.Pattern[str]", *, packages: Sequence[Tuple[str, ...]] = ()
+    ) -> Set[str]:
+        """qnames of functions whose bare NAME matches ``pattern``, optionally
+        restricted to files inside any of ``packages`` (path-part tuples)."""
+        out: Set[str] = set()
+        for info in self.functions.values():
+            if not pattern.search(info.name):
+                continue
+            if packages and not any(info.ctx.in_package(*p) for p in packages):
+                continue
+            out.add(info.qname)
+        return out
+
+    _HOT_SEED = re.compile(
+        r"densify|dispatch|_chunk_layout|_pack_columnar|^(consume|consume_groups)$"
+    )
+
+    def hot_path(self) -> Set[str]:
+        """The per-chunk path: transitive callees of the engine
+        ``densify``/``dispatch``/``consume`` entry points (plus the hot
+        routing helpers), seeded in ``repro.etl``/``repro.kernels`` -- or
+        anywhere when neither package is in the file set, so bare fixture
+        trees exercise the same scoping."""
+        if self._hot is None:
+            pkgs: Sequence[Tuple[str, ...]] = (("repro", "etl"), ("repro", "kernels"))
+            seeds = self.seeds_matching(self._HOT_SEED, packages=pkgs)
+            if not seeds:
+                seeds = self.seeds_matching(self._HOT_SEED)
+            self._hot = self.reachable(seeds)
+        return self._hot
+
+    def only_called_from(self, qname: str, root: str) -> bool:
+        """True when every caller path of ``qname`` terminates at ``root``
+        (the wrapper-resolution dual of :meth:`reachable`): ``qname`` is a
+        private helper of ``root`` and inherits its privileges.  A function
+        with any caller chain escaping to another root -- or with no callers
+        at all -- is not."""
+        if qname == root:
+            return True
+        seen: Set[str] = set()
+        stack = [qname]
+        while stack:
+            q = stack.pop()
+            if q in seen or q == root:
+                continue
+            seen.add(q)
+            callers = self.callers.get(q, set())
+            if not callers:
+                return False  # an open entry point, not a private helper
+            stack.extend(callers)
+        return True
+
+    # -- buffer donation ------------------------------------------------------
+    def _build_donation_map(self) -> None:
+        """Two passes: (1) donation factories -- functions RETURNING a
+        ``jax.jit(..., donate_argnums=...)`` program; (2) a fixpoint
+        propagating donation through wrappers that feed a parameter into a
+        donated position of a factory program or another donating function.
+        """
+        self.factories: Dict[str, Tuple[int, ...]] = {}
+        for qname, info in self.functions.items():
+            for node in ast.walk(info.node):
+                if isinstance(node, ast.Return) and isinstance(node.value, ast.Call):
+                    pos = _jit_donated_positions(node.value, info.module)
+                    if pos:
+                        self.factories[qname] = pos
+        # module-level programs: ``f = jax.jit(..., donate_argnums=...)`` or
+        # ``g = factory(...)`` bound at import time -- calling the bound name
+        # (locally or through an import) donates
+        self.programs: Dict[str, Tuple[int, ...]] = {}
+        for mod in self.modules.values():
+            for stmt in mod.ctx.tree.body:
+                if not (
+                    isinstance(stmt, ast.Assign) and isinstance(stmt.value, ast.Call)
+                ):
+                    continue
+                pos = self.donated_positions(mod, stmt.value)
+                if not pos:
+                    continue
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Name):
+                        q = f"{mod.name}.{tgt.id}" if mod.name else tgt.id
+                        self.programs[q] = pos
+                        mod.top_level.add(tgt.id)
+        changed = True
+        while changed:
+            changed = False
+            for qname, info in self.functions.items():
+                params = info.params()
+                for call, donated in self._donating_calls(info):
+                    for p in donated:
+                        if p >= len(call.args):
+                            continue
+                        arg = call.args[p]
+                        if isinstance(arg, ast.Name) and arg.id in params:
+                            i = params.index(arg.id)
+                            if i not in info.donates:
+                                info.donates[i] = arg.id
+                                changed = True
+
+    def _donating_calls(
+        self, info: FunctionInfo
+    ) -> List[Tuple[ast.Call, Tuple[int, ...]]]:
+        """Call sites inside ``info`` whose positional args include donated
+        positions: direct calls of donating functions, and calls OF a
+        factory's return value (``_columnar_program(...)(packed, ...)``)."""
+        out: List[Tuple[ast.Call, Tuple[int, ...]]] = []
+        for node in ast.walk(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            pos = self.donated_positions(info.module, node.func)
+            if pos:
+                out.append((node, pos))
+        return out
+
+    def donated_positions(
+        self, module: Module, func: ast.expr
+    ) -> Tuple[int, ...]:
+        """Donated positional-arg positions of calling ``func``, resolved
+        through factories, wrappers and imports (empty when not donating)."""
+        # factory-result-called-immediately: factory(...)(args)
+        if isinstance(func, ast.Call):
+            for t in self.resolve_call(module, func.func):
+                if t.qname in self.factories:
+                    return self.factories[t.qname]
+            # direct jax.jit(fn, donate_argnums=...)(args)
+            return _jit_donated_positions(func, module)
+        for t in self.resolve_call(module, func):
+            if t.donates:
+                return tuple(sorted(t.donates))
+            if t.qname in self.factories:
+                # calling the factory itself donates nothing; its RESULT does
+                continue
+        chain = attr_chain(func)
+        if chain is not None:
+            q = module.resolve(chain)
+            if q is not None and q in self.programs:
+                return self.programs[q]
+        return ()
+
+    def donating_function(
+        self, module: Module, func: ast.expr
+    ) -> Optional[FunctionInfo]:
+        """The resolved donating callee of a call expression, if any."""
+        for t in self.resolve_call(module, func):
+            if t.donates:
+                return t
+        return None
+
+
+def as_project(ctxs: Sequence[FileCtx]) -> Project:
+    """The Project for a ``check_project`` argument: identity for the one
+    :func:`repro.analysis.core.analyze` built, a fresh build for a plain
+    FileCtx list (direct rule unit tests)."""
+    return ctxs if isinstance(ctxs, Project) else Project(list(ctxs))

@@ -2,9 +2,14 @@
 
 from . import (  # noqa: F401
     control_purity,
+    donated_buffer,
+    epoch_pin,
     host_sync,
     hot_loop,
     jit_cache,
     kernel_parity,
     private_reach_in,
+    single_writer,
+    transfer_accounting,
+    waivers,
 )

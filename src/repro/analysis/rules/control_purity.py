@@ -12,7 +12,12 @@ after it was logged, corrupting the already-written history.
 
 Two checks:
 
-  * ``.mutate(...)`` may be called only inside ``StateCoordinator.apply``;
+  * ``.mutate(...)`` may be called only inside ``StateCoordinator.apply``
+    -- resolved through the call graph, not textual match: a private
+    helper whose every caller chain terminates at ``apply``
+    (:meth:`Project.only_called_from`) inherits the privilege, so
+    ``apply`` can be refactored into steps without waivers, while a
+    helper also reachable from public code is refused;
   * every class deriving (transitively, within a file) from
     ``ControlEvent`` must be decorated ``@dataclasses.dataclass(frozen=
     True)``.
@@ -21,9 +26,10 @@ Two checks:
 from __future__ import annotations
 
 import ast
-from typing import Iterator, Set
+from typing import Iterator, Optional, Sequence, Set, Tuple
 
 from ..core import FileCtx, Finding, Rule, register
+from ..project import as_project
 
 
 def _dataclass_frozen(dec: ast.expr) -> bool:
@@ -53,27 +59,46 @@ class ControlPlanePurity(Rule):
     )
 
     def check_file(self, ctx: FileCtx) -> Iterator[Finding]:
-        yield from self._check_mutate_calls(ctx)
         yield from self._check_frozen_events(ctx)
-
-    # -- check 1: .mutate() call sites ---------------------------------------
-    def _check_mutate_calls(self, ctx: FileCtx) -> Iterator[Finding]:
+        # module-level .mutate() calls: no enclosing function, so the call
+        # graph has nothing to resolve -- always a violation
         for cls, fn, node in _calls_with_context(ctx.tree):
-            if not (
-                isinstance(node.func, ast.Attribute)
-                and node.func.attr == "mutate"
+            if fn is None and self._is_mutate(node):
+                yield self._mutate_finding(ctx, node, cls or "<module>")
+
+    def check_project(self, ctxs: Sequence[FileCtx]) -> Iterator[Finding]:
+        # check 1, resolved through the call graph: .mutate() only inside
+        # StateCoordinator.apply or a private helper of it
+        project = as_project(ctxs)
+        apply_qnames = {
+            info.qname
+            for info in project.functions.values()
+            if info.cls == "StateCoordinator" and info.name == "apply"
+        }
+        for info in project.functions.values():
+            if info.qname in apply_qnames:
+                continue
+            if apply_qnames and any(
+                project.only_called_from(info.qname, a) for a in apply_qnames
             ):
                 continue
-            if cls == "StateCoordinator" and fn == "apply":
-                continue
-            where = f"{cls}.{fn}" if cls else (fn or "<module>")
-            yield ctx.finding(
-                self.id,
-                node,
-                f".mutate() called from {where}: registry mutations must go "
-                "through StateCoordinator.apply(event) so they land in the "
-                "replayable control_log",
-            )
+            for node in ast.walk(info.node):
+                if isinstance(node, ast.Call) and self._is_mutate(node):
+                    where = f"{info.cls}.{info.name}" if info.cls else info.name
+                    yield self._mutate_finding(info.ctx, node, where)
+
+    @staticmethod
+    def _is_mutate(node: ast.Call) -> bool:
+        return isinstance(node.func, ast.Attribute) and node.func.attr == "mutate"
+
+    def _mutate_finding(self, ctx: FileCtx, node: ast.Call, where: str) -> Finding:
+        return ctx.finding(
+            self.id,
+            node,
+            f".mutate() called from {where}: registry mutations must go "
+            "through StateCoordinator.apply(event) so they land in the "
+            "replayable control_log",
+        )
 
     # -- check 2: ControlEvent subclasses are frozen dataclasses --------------
     def _check_frozen_events(self, ctx: FileCtx) -> Iterator[Finding]:
@@ -112,10 +137,14 @@ class ControlPlanePurity(Rule):
                 )
 
 
-def _calls_with_context(tree: ast.Module):
+def _calls_with_context(
+    tree: ast.Module,
+) -> Iterator[Tuple[Optional[str], Optional[str], ast.Call]]:
     """Yield (enclosing_class, enclosing_function, Call) for every call."""
 
-    def walk(node, cls, fn):
+    def walk(
+        node: ast.AST, cls: Optional[str], fn: Optional[str]
+    ) -> Iterator[Tuple[Optional[str], Optional[str], ast.Call]]:
         for child in ast.iter_child_nodes(node):
             if isinstance(child, ast.ClassDef):
                 yield from walk(child, child.name, fn)

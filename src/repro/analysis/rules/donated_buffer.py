@@ -1,0 +1,175 @@
+"""donated-buffer-reuse: no read of a buffer after it was donated to a jit
+program.
+
+PR 6's device-densify path donates the packed columnar buffer into the
+fused dispatch (``kernels/ops.py``: ``_columnar_program(...)`` /
+``_columnar_sharded_program(...)`` are built with ``donate_argnums=(0,)``
+on non-CPU backends) so XLA can reuse the input allocation for the
+output.  After the call the donated array is DEAD -- but only on backends
+that honour donation.  The CPU backend, which is what every test and the
+whole of CI runs on, silently ignores ``donate_argnums``, so a read of
+the donated buffer after the call returns the right answer in CI and
+garbage (or a crash) on TPU/GPU.  That asymmetry is exactly the class of
+bug a test suite cannot catch; this rule makes the *dataflow* the gate.
+
+Mechanics (project model): functions RETURNING ``jax.jit(...,
+donate_argnums=...)`` are donation factories; wrappers that feed a
+parameter into a donated position of a factory's program donate that
+parameter in turn (the fixpoint in
+:meth:`repro.analysis.project.Project._build_donation_map` -- so
+``ops.dmm_apply_columnar`` donates ``packed`` and the rule sees through
+the import/alias at every call site).  Within each function the rule
+records the dotted chain passed in each donated position
+(``dense.packed``) and flags any later load of that chain -- or of a
+longer chain it prefixes -- unless the root name was rebound in between.
+Textual order approximates execution order; a donated read hidden by a
+back-edge needs a reviewer, not a waiver.
+
+Conditional donation (``donate_argnums=(0,) if donate else ()``) counts
+as donating: the whole point is the configuration CI never exercises.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Sequence, Tuple
+
+from ..core import FileCtx, Finding, Rule, register
+from ..project import FunctionInfo, Project, as_project, attr_chain
+
+
+def _pos(node: ast.AST) -> Tuple[int, int]:
+    return (node.lineno, node.col_offset)
+
+
+def _end(node: ast.AST) -> Tuple[int, int]:
+    return (node.end_lineno or node.lineno, node.end_col_offset or 0)
+
+
+@register
+class DonatedBufferReuse(Rule):
+    id = "donated-buffer-reuse"
+    title = "no read of a buffer after it is donated to a jit program"
+    motivation = (
+        "donate_argnums is a no-op on the CPU CI backend: a reuse of the "
+        "donated packed buffer passes every test we can run and corrupts "
+        "on TPU/GPU (PR 6's device-densify contract)"
+    )
+
+    def check_project(self, ctxs: Sequence[FileCtx]) -> Iterator[Finding]:
+        project = as_project(ctxs)
+        for info in project.functions.values():
+            yield from self._check_fn(project, info)
+
+    # -- per-function dataflow ------------------------------------------------
+    def _check_fn(self, project: Project, info: FunctionInfo) -> Iterator[Finding]:
+        module = info.module
+        ctx = info.ctx
+
+        # local names bound to a donating program: g = _columnar_program(...)
+        # or g = jax.jit(f, donate_argnums=...) -- calling g(...) donates
+        local_programs: Dict[str, Tuple[int, ...]] = {}
+        for node in ast.walk(info.node):
+            if not (isinstance(node, ast.Assign) and isinstance(node.value, ast.Call)):
+                continue
+            # passing the whole Call to donated_positions asks "what would
+            # calling its RESULT donate": factory(...) and
+            # jax.jit(f, donate_argnums=...) both answer here
+            positions = project.donated_positions(module, node.value)
+            if positions:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        local_programs[tgt.id] = positions
+
+        # donation events: (end position of the call, donated chain, callee)
+        events: List[Tuple[Tuple[int, int], str, str]] = []
+        for node in ast.walk(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            donated_args: List[ast.expr] = []
+            callee = ""
+            t = project.donating_function(module, node.func)
+            if t is not None:
+                callee = t.name
+                for i, pname in sorted(t.donates.items()):
+                    if i < len(node.args):
+                        donated_args.append(node.args[i])
+                    else:
+                        for kw in node.keywords:
+                            if kw.arg == pname:
+                                donated_args.append(kw.value)
+            else:
+                positions: Tuple[int, ...] = ()
+                if isinstance(node.func, ast.Name) and node.func.id in local_programs:
+                    positions = local_programs[node.func.id]
+                    callee = node.func.id
+                else:
+                    positions = project.donated_positions(module, node.func)
+                    if positions:
+                        callee = ctx.segment(node.func) or "<program>"
+                for p in positions:
+                    if p < len(node.args):
+                        donated_args.append(node.args[p])
+            for arg in donated_args:
+                chain = attr_chain(arg)
+                if chain is not None:
+                    events.append((_end(node), chain, callee))
+        if not events:
+            return
+
+        # rebinds of a root name kill its tracking from that line on
+        rebinds: Dict[str, List[int]] = {}
+
+        def bind(tgt: ast.expr, line: int) -> None:
+            if isinstance(tgt, ast.Name):
+                rebinds.setdefault(tgt.id, []).append(line)
+            elif isinstance(tgt, (ast.Tuple, ast.List)):
+                for el in tgt.elts:
+                    bind(el, line)
+
+        for node in ast.walk(info.node):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    bind(tgt, node.lineno)
+            elif isinstance(node, (ast.AnnAssign, ast.NamedExpr)):
+                bind(node.target, node.lineno)
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                bind(node.target, node.lineno)
+            elif isinstance(node, (ast.With, ast.AsyncWith)):
+                for item in node.items:
+                    if item.optional_vars is not None:
+                        bind(item.optional_vars, node.lineno)
+
+        def rebound_between(root: str, lo: int, hi: int) -> bool:
+            return any(lo <= ln <= hi for ln in rebinds.get(root, ()))
+
+        # later loads of a donated chain (or anything it prefixes)
+        for node in ast.walk(info.node):
+            if not isinstance(node, (ast.Name, ast.Attribute)):
+                continue
+            if not isinstance(getattr(node, "ctx", None), ast.Load):
+                continue
+            chain = attr_chain(node)
+            if chain is None:
+                continue
+            for call_end, donated, callee in events:
+                # exact-chain match only: a read of `packed.shape` contains
+                # the load of `packed` as a subexpression, so the exact node
+                # is always walked and longer chains never need their own
+                # report
+                if chain != donated:
+                    continue
+                if _pos(node) < call_end:
+                    continue
+                root = donated.split(".")[0]
+                if rebound_between(root, call_end[0], node.lineno):
+                    continue
+                yield ctx.finding(
+                    self.id,
+                    node,
+                    f"'{chain}' read after being donated to {callee}() in "
+                    f"{info.name}() (donate_argnums): the buffer is dead on "
+                    "TPU/GPU even though CPU CI keeps it alive -- recompute "
+                    "it, use the program's output, or drop the donation",
+                )
+                break

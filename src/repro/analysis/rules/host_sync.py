@@ -16,18 +16,31 @@ sync point from an accident:
 
 Scope: functions named ``dispatch`` / ``emit`` / ``_run_async`` and the
 ``dmm_apply*`` wrappers, in the ``repro.etl`` and ``repro.kernels``
-packages.
+packages -- checked with the full strict/lenient heuristics -- PLUS
+(project model) every function *reachable* from a ``dispatch`` /
+``dmm_apply*`` seed through the call graph, which closes the
+wrapper-indirection hole: hoisting a ``np.asarray`` into an innocently
+named helper called from dispatch used to hide it from this rule.
+Reached helpers are checked against the EXPLICIT sync set only
+(np/jax sync calls and ``.block_until_ready()``); the scalar-read
+heuristics (``.item()``, ``float(x[...])``) stay name-scoped because a
+general helper legitimately does host-scalar work that dispatch itself
+must not.  ``_run_async`` deliberately does not seed reachability: its
+callees include the whole densify subtree, whose host-numpy work is the
+thing the async overlap hides.
 """
 
 from __future__ import annotations
 
 import ast
 import re
-from typing import Iterator
+from typing import Iterator, Sequence, Set, Tuple
 
 from ..core import FileCtx, Finding, Rule, register
+from ..project import as_project
 
 _HOT_NAME = re.compile(r"^(dispatch|emit|_run_async|dmm_apply\w*)$")
+_REACH_SEED = re.compile(r"^(dispatch|dmm_apply\w*)$")
 
 # np-namespace calls that force a host readback of their operand
 _NP_SYNC = frozenset({"asarray", "array", "ascontiguousarray", "copyto"})
@@ -49,14 +62,70 @@ class HostSyncInHotPath(Rule):
     )
 
     def check_file(self, ctx: FileCtx) -> Iterator[Finding]:
-        if not (ctx.in_package("repro", "etl") or ctx.in_package("repro", "kernels")):
+        if not self._in_scope(ctx):
             return
         for node in ast.walk(ctx.tree):
             if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 if _HOT_NAME.match(node.name):
                     yield from self._check_region(ctx, node)
 
-    def _check_region(self, ctx: FileCtx, fn) -> Iterator[Finding]:
+    def check_project(self, ctxs: Sequence[FileCtx]) -> Iterator[Finding]:
+        # helpers REACHED from dispatch/dmm_apply* (not name-matched --
+        # those already ran the full heuristics in check_file): flag the
+        # explicit sync calls only
+        project = as_project(ctxs)
+        seeds = project.seeds_matching(
+            _REACH_SEED, packages=(("repro", "etl"), ("repro", "kernels"))
+        )
+        for qname in sorted(project.reachable(seeds)):
+            info = project.functions[qname]
+            if _HOT_NAME.match(info.name) or not self._in_scope(info.ctx):
+                continue
+            yield from self._check_explicit(info.ctx, info.node)
+
+    @staticmethod
+    def _in_scope(ctx: FileCtx) -> bool:
+        return ctx.in_package("repro", "etl") or ctx.in_package("repro", "kernels")
+
+    def _check_explicit(self, ctx: FileCtx, fn: ast.FunctionDef) -> Iterator[Finding]:
+        where = f"in {fn.name}(), reachable from the dispatch path"
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if not isinstance(f, ast.Attribute):
+                continue
+            recv = f.value
+            if (
+                isinstance(recv, ast.Name)
+                and recv.id in ("np", "numpy")
+                and f.attr in _NP_SYNC
+            ):
+                yield ctx.finding(
+                    self.id,
+                    node,
+                    f"np.{f.attr}() {where} forces a host readback; the "
+                    "dispatch path must stay unblocked end-to-end (sync "
+                    "belongs in emit, annotated "
+                    "'# metl: allow[host-sync-in-hot-path] ...')",
+                )
+            elif (
+                isinstance(recv, ast.Name)
+                and recv.id == "jax"
+                and f.attr in _JAX_SYNC
+            ):
+                yield ctx.finding(
+                    self.id, node, f"jax.{f.attr}() {where} blocks on the device"
+                )
+            elif f.attr == "block_until_ready":
+                yield ctx.finding(
+                    self.id,
+                    node,
+                    f".block_until_ready() {where} blocks on its receiver; "
+                    "keep the dispatch handle unblocked",
+                )
+
+    def _check_region(self, ctx: FileCtx, fn: ast.FunctionDef) -> Iterator[Finding]:
         where = f"in hot-path function {fn.name}()"
         # emit is post-sync host code: only the readback ENTRY points need an
         # annotation there.  dispatch/_run_async/dmm_apply* must never touch

@@ -8,23 +8,37 @@ regressions re-enter the codebase the same way: an innocent ``for ev in
 events`` or ``ev.payload().items()`` inside a densify function, correct
 and quietly 10x slower.  This rule makes the loop itself the violation.
 
-Scope: functions whose name contains ``densify``/``dispatch`` plus the hot
-routing helpers (``_chunk_layout``/``_pack_columnar``), in ``repro.etl``
-and ``repro.kernels``.  Per-COLUMN and per-SHARD/per-BLOCK loops are fine
-(columns and shards are few and bounded); what is flagged is iteration
-whose trip count scales with the chunk: loops over events/items and any
-``.payload()`` call (the dict-walk marker).  The deliberate dict-walk
-oracle (:func:`repro.etl.engines.densify_chunk_dicts`) carries a
-function-level waiver on its ``def`` line.
+Scope (project model): the union of functions whose NAME contains
+``densify``/``dispatch`` plus the hot routing helpers
+(``_chunk_layout``/``_pack_columnar``) -- the pre-project textual
+scoping, kept so a hot-named function with no resolvable caller is still
+covered -- and everything in :meth:`Project.hot_path`: transitive callees
+of the engine ``densify``/``dispatch``/``consume`` entry points, resolved
+through the call graph.  The reachability half is what closes the
+wrapper-indirection false negative: a per-event walk in an innocently
+named helper called from ``consume_groups`` is on the hot path whatever
+it is called.  Both halves restricted to ``repro.etl`` and
+``repro.kernels`` files.
+
+Per-COLUMN and per-SHARD/per-BLOCK loops are fine (columns and shards are
+few and bounded); what is flagged is iteration whose trip count scales
+with the chunk: loops over events/items and any ``.payload()`` call (the
+dict-walk marker).  The deliberate per-event paths carry function-level
+waivers on their ``def`` lines: the dict-walk oracle
+(:func:`repro.etl.engines.densify_chunk_dicts`), the legacy ``Groups``
+lift at the consume boundary (:func:`repro.etl.engines.as_triaged`) and
+the source-boundary payload flatten
+(:func:`repro.etl.events.columnarize`).
 """
 
 from __future__ import annotations
 
 import ast
 import re
-from typing import Iterator
+from typing import Iterator, Sequence, Set, Tuple
 
 from ..core import FileCtx, Finding, Rule, register
+from ..project import as_project
 
 _HOT_NAME = re.compile(r"densify|dispatch|_chunk_layout|_pack_columnar")
 
@@ -44,15 +58,32 @@ class HotPathPythonLoop(Rule):
         "payload-dict densify walk, 8.5x once vectorised) regression class"
     )
 
-    def check_file(self, ctx: FileCtx) -> Iterator[Finding]:
-        if not (ctx.in_package("repro", "etl") or ctx.in_package("repro", "kernels")):
-            return
-        for node in ast.walk(ctx.tree):
-            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                if _HOT_NAME.search(node.name):
-                    yield from self._check_fn(ctx, node)
+    def check_project(self, ctxs: Sequence[FileCtx]) -> Iterator[Finding]:
+        project = as_project(ctxs)
+        hot = project.hot_path()
+        seen: Set[Tuple[str, int]] = set()
+        # reachability half: functions on the hot path through the call
+        # graph, whatever their name
+        for qname in sorted(hot):
+            info = project.functions[qname]
+            if self._in_scope(info.ctx):
+                seen.add((info.ctx.rel, info.node.lineno))
+                yield from self._check_fn(info.ctx, info.node)
+        # textual half: hot-NAMED functions the call graph could not reach
+        # (an entry point nothing analyzed calls yet is still hot)
+        for ctx in ctxs:
+            if not self._in_scope(ctx):
+                continue
+            for node in ast.walk(ctx.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    if _HOT_NAME.search(node.name) and (ctx.rel, node.lineno) not in seen:
+                        yield from self._check_fn(ctx, node)
 
-    def _check_fn(self, ctx: FileCtx, fn) -> Iterator[Finding]:
+    @staticmethod
+    def _in_scope(ctx: FileCtx) -> bool:
+        return ctx.in_package("repro", "etl") or ctx.in_package("repro", "kernels")
+
+    def _check_fn(self, ctx: FileCtx, fn: ast.FunctionDef) -> Iterator[Finding]:
         where = f"in hot-path function {fn.name}()"
         for node in ast.walk(fn):
             # the dict-walk marker: ANY payload() call means per-event dicts

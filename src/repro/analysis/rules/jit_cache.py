@@ -146,7 +146,7 @@ class JitCacheHygiene(Rule):
         if cached:
             yield from self._check_call_sites(ctx, cached)
 
-    def _check_builder(self, ctx: FileCtx, fn) -> Iterator[Finding]:
+    def _check_builder(self, ctx: FileCtx, fn: ast.FunctionDef) -> Iterator[Finding]:
         args = fn.args
         if args.vararg is not None or args.kwarg is not None:
             star = args.vararg or args.kwarg
@@ -159,7 +159,9 @@ class JitCacheHygiene(Rule):
         for a in args.posonlyargs + args.args + args.kwonlyargs:
             yield from self._check_param(ctx, fn, a)
 
-    def _check_param(self, ctx: FileCtx, fn, a: ast.arg) -> Iterator[Finding]:
+    def _check_param(
+        self, ctx: FileCtx, fn: ast.FunctionDef, a: ast.arg
+    ) -> Iterator[Finding]:
         if a.annotation is None:
             yield ctx.finding(
                 self.id,

@@ -17,12 +17,18 @@ The grep gates had three failure modes this rule closes:
 Ownership: METLApp/engine internals belong to ``repro.etl``; Registry
 internals belong to ``repro.core``.  Files inside the owning package are
 exempt; ``self.`` access is always exempt.
+
+Project model: constructor calls and annotations additionally resolve
+through the file's import table (``FileCtx.module``), so ``from
+repro.etl.metl import METLApp as App; a = App(...)`` types ``a`` exactly
+like the unaliased name -- the one alias form the original rule still
+missed.
 """
 
 from __future__ import annotations
 
 import ast
-from typing import Dict, Iterator, Optional
+from typing import Any, Dict, Iterator, Optional, Set
 
 from ..core import FileCtx, Finding, Rule, register
 
@@ -88,9 +94,22 @@ def _name_hint(name: str) -> Optional[str]:
     return None
 
 
-def _annot_kind(node: Optional[ast.expr]) -> Optional[str]:
+def _resolved_kind(name: str, module: Any, table: Dict[str, str]) -> Optional[str]:
+    """Map a local name through the kind table, resolving import aliases
+    via the project model's module import table when one is attached."""
+    kind = table.get(name)
+    if kind is not None:
+        return kind
+    if module is not None:
+        qname = module.resolve(name)
+        if qname is not None:
+            return table.get(qname.rsplit(".", 1)[-1])
+    return None
+
+
+def _annot_kind(node: Optional[ast.expr], module: Any = None) -> Optional[str]:
     if isinstance(node, ast.Name):
-        return _ANNOT_KINDS.get(node.id)
+        return _resolved_kind(node.id, module, _ANNOT_KINDS)
     if isinstance(node, ast.Attribute):
         return _ANNOT_KINDS.get(node.attr)
     if isinstance(node, ast.Constant) and isinstance(node.value, str):
@@ -99,7 +118,7 @@ def _annot_kind(node: Optional[ast.expr]) -> Optional[str]:
 
 
 class _Scope:
-    def __init__(self, parent: Optional["_Scope"] = None):
+    def __init__(self, parent: Optional["_Scope"] = None) -> None:
         self.parent = parent
         self.kinds: Dict[str, str] = {}
 
@@ -138,13 +157,13 @@ class PrivateReachIn(Rule):
         yield from self._visit(ctx, ctx.tree, _Scope(), exempt)
 
     # -- scoped walk ----------------------------------------------------------
-    def _infer(self, scope: _Scope, node: ast.expr) -> Optional[str]:
+    def _infer(self, ctx: FileCtx, scope: _Scope, node: ast.expr) -> Optional[str]:
         if isinstance(node, ast.Name):
             return scope.get(node.id)
         if isinstance(node, ast.Call):
             fn = node.func
             if isinstance(fn, ast.Name):
-                return _CALL_KINDS.get(fn.id)
+                return _resolved_kind(fn.id, ctx.module, _CALL_KINDS)
             if isinstance(fn, ast.Attribute):
                 return _CALL_KINDS.get(fn.attr)
         if isinstance(node, ast.Attribute):
@@ -161,12 +180,14 @@ class PrivateReachIn(Rule):
             for el in target.elts:
                 self._bind(scope, el, None)
 
-    def _visit(self, ctx, node, scope: _Scope, exempt) -> Iterator[Finding]:
+    def _visit(
+        self, ctx: FileCtx, node: ast.AST, scope: _Scope, exempt: Set[str]
+    ) -> Iterator[Finding]:
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
             inner = _Scope(scope)
             args = node.args
             for a in args.posonlyargs + args.args + args.kwonlyargs:
-                kind = _annot_kind(a.annotation)
+                kind = _annot_kind(a.annotation, ctx.module)
                 if kind is not None:
                     inner.set(a.arg, kind)
             for child in node.body:
@@ -183,29 +204,31 @@ class PrivateReachIn(Rule):
             return
         if isinstance(node, ast.Assign):
             yield from self._visit(ctx, node.value, scope, exempt)
-            kind = self._infer(scope, node.value)
+            kind = self._infer(ctx, scope, node.value)
             for t in node.targets:
                 self._bind(scope, t, kind)
             return
         if isinstance(node, ast.AnnAssign):
             if node.value is not None:
                 yield from self._visit(ctx, node.value, scope, exempt)
-            kind = _annot_kind(node.annotation)
+            kind = _annot_kind(node.annotation, ctx.module)
             if kind is None and node.value is not None:
-                kind = self._infer(scope, node.value)
+                kind = self._infer(ctx, scope, node.value)
             if isinstance(node.target, ast.Name):
                 scope.set(node.target.id, kind)
             return
         for child in ast.iter_child_nodes(node):
             yield from self._visit(ctx, child, scope, exempt)
 
-    def _check_attr(self, ctx, node: ast.Attribute, scope: _Scope, exempt):
+    def _check_attr(
+        self, ctx: FileCtx, node: ast.Attribute, scope: _Scope, exempt: Set[str]
+    ) -> Iterator[Finding]:
         attr = node.attr
         if not attr.startswith("_") or attr.startswith("__"):
             return
         if isinstance(node.value, ast.Name) and node.value.id == "self":
             return
-        kind = self._infer(scope, node.value)
+        kind = self._infer(ctx, scope, node.value)
         if kind is None and attr in _KNOWN_APP_PRIVATE:
             kind = "app"  # any-receiver backstop (old grep pattern 2)
         if kind is None or kind in exempt:

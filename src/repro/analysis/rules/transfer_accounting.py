@@ -1,0 +1,90 @@
+"""transfer-accounting: the per-chunk path crosses host->device in one
+place.
+
+PR 6's device-densify contract is ONE packed host->device transfer per
+chunk (the int32 columnar buffer into the fused dispatch); the legacy
+host-densify branch makes its four array transfers at one accounted spot
+(``stats["transfers"] += ...`` next to the conversions).  The roofline and
+the bench gate both *price* chunks by that accounting, so a stray
+``jnp.asarray``/``jax.device_put`` on the per-chunk path is double
+trouble: it adds an unacounted transfer (the roofline model silently
+diverges from reality) and on a real accelerator it puts PCIe traffic
+back on the path PR 6 took it off.
+
+Scope (project model): functions inside :meth:`Project.hot_path` --
+transitive callees of the engine ``densify``/``dispatch``/``consume``
+entry points -- restricted to ``repro.etl`` files.  Kernel-internal
+``jnp.asarray(fill, dtype)`` casts run inside traced code (no transfer)
+and are out of scope.  The flagged conversions: ``jnp.asarray`` /
+``jnp.array`` / ``jnp.ascontiguousarray`` and ``jax.device_put``,
+resolved through import aliases.  The engines' single conversion site
+(``_to_device``) carries the rule's one waiver; new conversions belong
+there, next to the accounting.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional, Sequence
+
+from ..core import FileCtx, Finding, Rule, register
+from ..project import Project, as_project, attr_chain
+
+_JNP_CONVERT = frozenset({"asarray", "array", "ascontiguousarray"})
+
+
+def _conversion(chain: Optional[str], resolved: Optional[str]) -> Optional[str]:
+    """The pretty name of a host->device conversion call, or None."""
+    for c in (resolved, chain):
+        if not c:
+            continue
+        parts = c.split(".")
+        if parts[-1] == "device_put" and parts[0] == "jax":
+            return "jax.device_put"
+        if parts[-1] in _JNP_CONVERT and parts[0] in ("jnp", "jax"):
+            # jnp.asarray / jax.numpy.asarray
+            if parts[0] == "jnp" or (len(parts) > 2 and parts[1] == "numpy"):
+                return f"jnp.{parts[-1]}"
+    return None
+
+
+@register
+class TransferAccounting(Rule):
+    id = "transfer-accounting"
+    title = "no host->device conversion on the per-chunk path outside the accounted site"
+    motivation = (
+        "PR 6's one-packed-transfer-per-chunk contract and the roofline's "
+        "transfer pricing both assume every host->device crossing happens "
+        "at the accounted site; a stray jnp.asarray on the hot path puts "
+        "unacounted PCIe traffic back where PR 6 removed it"
+    )
+
+    def check_project(self, ctxs: Sequence[FileCtx]) -> Iterator[Finding]:
+        project = as_project(ctxs)
+        hot = project.hot_path()
+        for qname in sorted(hot):
+            info = project.functions[qname]
+            if not info.ctx.in_package("repro", "etl"):
+                continue
+            ctx = info.ctx
+            for node in ast.walk(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                chain = attr_chain(node.func)
+                resolved = (
+                    info.module.resolve(chain)
+                    if chain is not None and info.module is not None
+                    else None
+                )
+                conv = _conversion(chain, resolved)
+                if conv is None:
+                    continue
+                yield ctx.finding(
+                    self.id,
+                    node,
+                    f"{conv}(...) in hot-path function {info.name}() is a "
+                    "host->device transfer the per-chunk accounting never "
+                    "sees; route it through the engines' accounted "
+                    "conversion site (_to_device) or move it out of the "
+                    "per-chunk path",
+                )

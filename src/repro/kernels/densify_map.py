@@ -43,7 +43,7 @@ cell, and the item tables ride whole in VMEM (they are O(chunk) small).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,18 +57,18 @@ SUBLANE = 8
 
 
 def _kernel(
-    rows_ref,
-    blks_ref,
-    src2d_ref,
-    slot_ref,
-    x_ref,
-    out_v_ref,
-    out_m_ref,
+    rows_ref: Any,
+    blks_ref: Any,
+    src2d_ref: Any,
+    slot_ref: Any,
+    x_ref: Any,
+    out_v_ref: Any,
+    out_m_ref: Any,
     *,
     block_s: int,
     k: int,
     fill: float,
-):
+) -> None:
     i = pl.program_id(0)
     rows = rows_ref[pl.ds(i * block_s, block_s)]  # (block_s,) int32 from SMEM
     blks = blks_ref[pl.ds(i * block_s, block_s)]  # (block_s,) int32 from SMEM

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,9 +40,10 @@ NEG_INF = -1e30
 
 
 def _kernel(
-    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    q_ref: Any, k_ref: Any, v_ref: Any, o_ref: Any,
+    acc_ref: Any, m_ref: Any, l_ref: Any,
     *, bq: int, bk: int, nk: int, scale: float, causal: bool,
-):
+) -> None:
     kj = pl.program_id(2)
     qi = pl.program_id(1)
 

@@ -29,7 +29,7 @@ O(B * N_in * N_out) MXU FLOPs; benchmarks/bench_mapping.py reports the A/B.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +42,16 @@ LANE = 128
 SUBLANE = 8
 
 
-def _kernel(src_ref, vals_ref, mask_ref, out_v_ref, out_m_ref, *, block_n: int, fill: float):
+def _kernel(
+    src_ref: Any,
+    vals_ref: Any,
+    mask_ref: Any,
+    out_v_ref: Any,
+    out_m_ref: Any,
+    *,
+    block_n: int,
+    fill: float,
+) -> None:
     j = pl.program_id(1)
     idx = src_ref[pl.ds(j * block_n, block_n)]  # (block_n,) int32 from SMEM
     valid = idx >= 0

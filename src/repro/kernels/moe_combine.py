@@ -19,6 +19,7 @@ the output tile stays resident while expert tiles stream through.
 from __future__ import annotations
 
 import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +29,7 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["moe_combine"]
 
 
-def _kernel(c_ref, e_ref, o_ref, acc_ref, *, nk: int):
+def _kernel(c_ref: Any, e_ref: Any, o_ref: Any, acc_ref: Any, *, nk: int) -> None:
     k = pl.program_id(2)
 
     @pl.when(k == 0)

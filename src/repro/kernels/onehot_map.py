@@ -13,7 +13,7 @@ version a free win on bytes); the MXU contraction is the cost difference.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +26,16 @@ LANE = 128
 SUBLANE = 8
 
 
-def _kernel(src_ref, vals_ref, mask_ref, out_v_ref, out_m_ref, *, block_n: int, fill: float):
+def _kernel(
+    src_ref: Any,
+    vals_ref: Any,
+    mask_ref: Any,
+    out_v_ref: Any,
+    out_m_ref: Any,
+    *,
+    block_n: int,
+    fill: float,
+) -> None:
     j = pl.program_id(1)
     idx = src_ref[pl.ds(j * block_n, block_n)]  # (block_n,)
     vals = vals_ref[...].astype(jnp.float32)  # (bb, n_in_pad)

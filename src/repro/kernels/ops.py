@@ -17,7 +17,7 @@ densification with chunk N's device execution (double-buffered consume).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -143,7 +143,9 @@ def dmm_apply_fused(
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_program(mesh: Mesh, axis: str, impl: str, fill: float):
+def _sharded_program(
+    mesh: Mesh, axis: str, impl: str, fill: float
+) -> Callable[..., Tuple[jax.Array, jax.Array]]:
     """One jitted shard_map program per (mesh, axis, impl, fill).
 
     The cache keeps the shard_map closure identity stable so the jit cache
@@ -181,7 +183,7 @@ def dmm_apply_sharded(
     blks: jax.Array,
     src3d: jax.Array,
     *,
-    mesh,
+    mesh: Mesh,
     axis: str = "data",
     impl: str = "auto",
     fill: float = 0.0,
@@ -235,7 +237,15 @@ def dmm_apply_sharded(
 # the whole buffer is one dtype (one transfer, no repacking on device).
 
 
-def _resolve_items(packed, uid_slot, uid_col, *, n_items: int, n_events: int, k: int):
+def _resolve_items(
+    packed: jax.Array,
+    uid_slot: jax.Array,
+    uid_col: jax.Array,
+    *,
+    n_items: int,
+    n_events: int,
+    k: int,
+) -> Tuple[jax.Array, jax.Array]:
     """Unpack the item columns and resolve them against the plan tables.
 
     Returns ``(slot2d, x2d)``: per selected event, its first K payload items
@@ -277,7 +287,9 @@ def _route_offset(n_items: int, n_events: int) -> int:
 
 
 @functools.lru_cache(maxsize=None)
-def _columnar_program(impl: str, fill: float, donate: bool):
+def _columnar_program(
+    impl: str, fill: float, donate: bool
+) -> Callable[..., Tuple[jax.Array, jax.Array]]:
     """One jitted resolve+densify+map program per (impl, fill, donate).
 
     ``donate`` hands the packed per-chunk buffer back to jax on the steady-
@@ -346,7 +358,9 @@ def dmm_apply_columnar(
 
 
 @functools.lru_cache(maxsize=None)
-def _columnar_sharded_program(mesh: Mesh, axis: str, impl: str, fill: float, donate: bool):
+def _columnar_sharded_program(
+    mesh: Mesh, axis: str, impl: str, fill: float, donate: bool
+) -> Callable[..., Tuple[jax.Array, jax.Array]]:
     """Sharded twin of :func:`_columnar_program`: the uid resolve runs
     replicated inside the same jit, then shard_map fans the per-shard
     routing and block-table slice out exactly like
@@ -396,7 +410,7 @@ def dmm_apply_columnar_sharded(
     uid_col: jax.Array,
     src3d: jax.Array,
     *,
-    mesh,
+    mesh: Mesh,
     n_items: int,
     n_events: int,
     n_rows: int,

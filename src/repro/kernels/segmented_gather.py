@@ -42,7 +42,7 @@ Python loop around it, which dominates at ETL chunk sizes.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,17 +56,17 @@ SUBLANE = 8
 
 
 def _kernel(
-    rows_ref,
-    blks_ref,
-    src2d_ref,
-    vals_ref,
-    mask_ref,
-    out_v_ref,
-    out_m_ref,
+    rows_ref: Any,
+    blks_ref: Any,
+    src2d_ref: Any,
+    vals_ref: Any,
+    mask_ref: Any,
+    out_v_ref: Any,
+    out_m_ref: Any,
     *,
     block_s: int,
     fill: float,
-):
+) -> None:
     i = pl.program_id(0)
     rows = rows_ref[pl.ds(i * block_s, block_s)]  # (block_s,) int32 from SMEM
     blks = blks_ref[pl.ds(i * block_s, block_s)]  # (block_s,) int32 from SMEM

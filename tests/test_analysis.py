@@ -588,3 +588,346 @@ def test_cli_list_rules():
     assert proc.returncode == 0
     for rid in RULES or ["private-reach-in"]:
         assert rid in proc.stdout
+
+
+# ------------------------------------------------------ donated-buffer-reuse
+
+
+_DONATE_FIRING = """\
+import functools
+import jax
+
+@functools.lru_cache(maxsize=None)
+def _prog(donate: bool):
+    return jax.jit(lambda p: p * 2, donate_argnums=(0,) if donate else ())
+
+def apply_packed(packed):
+    out = _prog(True)(packed)
+    return packed.sum() + out
+"""
+
+
+def test_donated_reuse_fires_through_factory(tmp_path):
+    rep = _run(tmp_path, "src/repro/kernels/p.py", _DONATE_FIRING)
+    assert _rules_hit(rep) == {"donated-buffer-reuse"}
+
+
+def test_donated_reuse_clean_twin_rebind(tmp_path):
+    src = _DONATE_FIRING.replace(
+        "    out = _prog(True)(packed)\n    return packed.sum() + out\n",
+        "    packed = _prog(True)(packed)\n    return packed.sum()\n",
+    )
+    rep = _run(tmp_path, "src/repro/kernels/p.py", src)
+    assert "donated-buffer-reuse" not in _rules_hit(rep)
+
+
+def test_donated_reuse_module_level_program(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/kernels/p.py",
+        "import jax\n"
+        "f = jax.jit(lambda x: x + 1, donate_argnums=(0,))\n"
+        "def run(buf):\n"
+        "    out = f(buf)\n"
+        "    return buf.sum() + out\n",
+    )
+    assert _rules_hit(rep) == {"donated-buffer-reuse"}
+
+
+def test_donated_reuse_sees_through_import_alias(tmp_path):
+    # the wrapper donates its param via the fixpoint; the caller in another
+    # module reaches it through an import alias
+    _write(tmp_path, "src/repro/kernels/ops.py", _DONATE_FIRING.replace(
+        "def apply_packed(packed):\n"
+        "    out = _prog(True)(packed)\n"
+        "    return packed.sum() + out\n",
+        "def apply_packed(packed):\n"
+        "    return _prog(True)(packed)\n",
+    ))
+    _write(
+        tmp_path,
+        "src/repro/etl/e.py",
+        "from repro.kernels.ops import apply_packed as launch\n"
+        "def consume(buf):\n"
+        "    out = launch(buf)\n"
+        "    return buf[0], out\n",
+    )
+    rep = analyze([str(tmp_path)], select=["donated-buffer-reuse"])
+    hits = [f for f in rep.findings if f.rule == "donated-buffer-reuse"]
+    assert hits and "'buf'" in hits[0].message and "consume" in hits[0].message
+
+
+def test_donated_reuse_mutation_in_engines_copy(tmp_path):
+    """ISSUE mutation check: a read of the donated packed buffer after the
+    real dmm_apply_columnar callsite (copied from engines.py, resolved
+    cross-module into ops.py) must fire."""
+    for rel in ("src/repro/etl/engines.py", "src/repro/kernels/ops.py"):
+        _write(tmp_path, rel, (REPO / rel).read_text())
+    src = (REPO / "src/repro/etl/engines.py").read_text()
+    src += (
+        "\n\ndef _evil_reuse(dense, fused):\n"
+        "    outputs = dmm_apply_columnar(\n"
+        "        dense.packed,\n"
+        "        fused.uid_slot_dev,\n"
+        "        fused.uid_col_dev,\n"
+        "        fused.src2d,\n"
+        "        n_items=dense.n_items,\n"
+        "        n_events=dense.n_events,\n"
+        "        n_rows=dense.n_rows,\n"
+        "        k=dense.k,\n"
+        "    )\n"
+        "    return dense.packed.sum(), outputs\n"
+    )
+    _write(tmp_path, "src/repro/etl/engines.py", src)
+    rep = analyze([str(tmp_path)], select=["donated-buffer-reuse"])
+    assert not rep.ok
+    assert all(f.rule == "donated-buffer-reuse" for f in rep.findings)
+    assert any("dense.packed" in f.message for f in rep.findings)
+
+
+# ----------------------------------------------------- single-writer-control
+
+
+def test_single_writer_fires_outside_apply(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/x.py",
+        "def sneak(coord, ev):\n"
+        "    coord.control_log.append(ev)\n",
+    )
+    assert _rules_hit(rep) == {"single-writer-control"}
+
+
+def test_single_writer_clean_in_apply_and_its_helper(tmp_path):
+    # _log is only ever called from apply: the call graph resolves the
+    # wrapper, no finding
+    rep = _run(
+        tmp_path,
+        "src/repro/core/state.py",
+        "class StateCoordinator:\n"
+        "    def apply(self, event):\n"
+        "        self._log(event)\n"
+        "    def _log(self, event):\n"
+        "        self.control_log.append(event)\n",
+    )
+    assert "single-writer-control" not in _rules_hit(rep)
+
+
+def test_single_writer_open_helper_fires(tmp_path):
+    # the same helper with a second, non-apply caller is an open write path
+    rep = _run(
+        tmp_path,
+        "src/repro/core/state.py",
+        "class StateCoordinator:\n"
+        "    def apply(self, event):\n"
+        "        self._log(event)\n"
+        "    def _log(self, event):\n"
+        "        self.control_log.append(event)\n"
+        "def backdoor(coord, ev):\n"
+        "    coord._log(ev)\n",
+    )
+    assert "single-writer-control" in _rules_hit(rep)
+
+
+def test_single_writer_mutation_in_state_copy(tmp_path):
+    """ISSUE mutation check: an out-of-apply control_log append added to a
+    copy of the real state.py must fire."""
+    src = (REPO / "src/repro/core/state.py").read_text()
+    src += (
+        "\n\ndef sneak_record(coordinator, record):\n"
+        "    coordinator.control_log.append(record)\n"
+    )
+    _write(tmp_path, "src/repro/core/state.py", src)
+    rep = analyze([str(tmp_path)], select=["single-writer-control"])
+    assert not rep.ok
+    assert all(f.rule == "single-writer-control" for f in rep.findings)
+
+
+# --------------------------------------------------------- epoch-pin-escape
+
+
+def test_epoch_pin_fires_on_unpinned_chunk(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/e.py",
+        "def make(vals, mask):\n"
+        "    return DenseChunk(vals=vals, mask=mask)\n",
+    )
+    assert _rules_hit(rep) == {"epoch-pin-escape"}
+
+
+def test_epoch_pin_fires_on_read_across_mutation(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/e.py",
+        "def consume_guarded(coord, plan, evs, ev):\n"
+        "    dense = densify(plan, evs)\n"
+        "    coord.apply(ev)\n"
+        "    return dense.plan\n",
+    )
+    assert _rules_hit(rep) == {"epoch-pin-escape"}
+
+
+def test_epoch_pin_clean_twin_redensify(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/e.py",
+        "def consume_ok(coord, plan, evs, ev):\n"
+        "    dense = densify(plan, evs)\n"
+        "    rows = dense.plan\n"
+        "    coord.apply(ev)\n"
+        "    dense = densify(plan, evs)\n"
+        "    return dense.plan, rows\n",
+    )
+    assert "epoch-pin-escape" not in _rules_hit(rep)
+
+
+def test_epoch_pin_mutation_dropped_pin_in_engines_copy(tmp_path):
+    """ISSUE mutation check: dropping the plan pin from the real DenseChunk
+    construction (copied engines.py) must fire."""
+    src = (REPO / "src/repro/etl/engines.py").read_text()
+    mutated = src.replace(
+        "return DenseChunk(\n        plan=plan,",
+        "return DenseChunk(\n        plan=None,",
+        1,
+    )
+    assert mutated != src, "engines.py DenseChunk callsite moved; update test"
+    _write(tmp_path, "src/repro/etl/engines.py", mutated)
+    rep = analyze([str(tmp_path)], select=["epoch-pin-escape"])
+    assert not rep.ok
+    assert all(f.rule == "epoch-pin-escape" for f in rep.findings)
+
+
+# ------------------------------------------------------- transfer-accounting
+
+
+def test_transfer_accounting_fires_on_reachable_device_put(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/e.py",
+        "import jax\n"
+        "def dispatch(dense):\n"
+        "    return _stage(dense)\n"
+        "def _stage(dense):\n"
+        "    return jax.device_put(dense.vals)\n",
+    )
+    assert _rules_hit(rep) == {"transfer-accounting"}
+
+
+def test_transfer_accounting_clean_outside_hot_path(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/e.py",
+        "import jax\n"
+        "def prepare_offline(dense):\n"
+        "    return jax.device_put(dense.vals)\n",
+    )
+    assert "transfer-accounting" not in _rules_hit(rep)
+
+
+def test_transfer_accounting_waived_single_site(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/e.py",
+        "import jax.numpy as jnp\n"
+        "def dispatch(dense):\n"
+        "    return _to_device(dense.vals)\n"
+        "def _to_device(*arrays):  # metl: allow[transfer-accounting] the ONE accounted site\n"
+        "    return tuple(jnp.asarray(a) for a in arrays)\n",
+    )
+    assert "transfer-accounting" not in _rules_hit(rep)
+    assert any(f.rule == "transfer-accounting" for f, _ in rep.waived)
+
+
+# ------------------------------------------------------------ unused-waiver
+
+
+def test_unused_waiver_fires_on_stale_waiver(tmp_path):
+    rep = _run(
+        tmp_path,
+        "benchmarks/b.py",
+        "x = 1  # metl: allow[private-reach-in] excused code is long gone\n",
+    )
+    assert _rules_hit(rep) == {"unused-waiver"}
+
+
+def test_unused_waiver_clean_when_suppressing(tmp_path):
+    rep = _run(
+        tmp_path,
+        "benchmarks/b.py",
+        "x = thing._fused  # metl: allow[private-reach-in] exercising the shim\n",
+    )
+    assert rep.ok and rep.waived
+
+
+def test_unused_waiver_not_judged_when_rule_not_selected(tmp_path):
+    # a hot-path waiver can't be judged stale by a sweep that never ran the
+    # hot-path rule (the scoped tests/ sweep in ci.sh)
+    _write(
+        tmp_path,
+        "src/repro/etl/e.py",
+        "x = 1  # metl: allow[hot-path-python-loop] judged only when the rule runs\n",
+    )
+    scoped = analyze(
+        [str(tmp_path)],
+        select=["private-reach-in", "bad-waiver", "unused-waiver"],
+    )
+    assert scoped.ok
+    full = analyze([str(tmp_path)])
+    assert _rules_hit(full) == {"unused-waiver"}
+
+
+def test_unused_waiver_reasonless_is_bad_waiver_only(tmp_path):
+    rep = _run(tmp_path, "benchmarks/b.py", "x = 1  # metl: allow[private-reach-in]\n")
+    assert _rules_hit(rep) == {"bad-waiver"}
+
+
+def test_unused_waiver_cannot_be_waived(tmp_path):
+    rep = _run(
+        tmp_path,
+        "benchmarks/b.py",
+        "# metl: allow[unused-waiver] trying to excuse the audit itself\n"
+        "x = 1  # metl: allow[private-reach-in] stale\n",
+    )
+    assert "unused-waiver" in _rules_hit(rep)
+
+
+# ------------------------------------------------------------- registry (12)
+
+
+def test_all_twelve_rules_registered():
+    import repro.analysis.rules  # noqa: F401
+
+    assert set(RULES) >= {
+        "private-reach-in",
+        "host-sync-in-hot-path",
+        "hot-path-python-loop",
+        "control-plane-purity",
+        "jit-cache-hygiene",
+        "kernel-ref-parity",
+        "donated-buffer-reuse",
+        "single-writer-control",
+        "epoch-pin-escape",
+        "transfer-accounting",
+        "bad-waiver",
+        "unused-waiver",
+    }
+
+
+# ------------------------------------------------------------- CLI (github)
+
+
+def test_cli_github_output_renders_error_annotations(tmp_path):
+    _write(tmp_path, "benchmarks/b.py", "x = thing._fused\n")
+    proc = _cli(str(tmp_path), "--output", "github")
+    assert proc.returncode == 1
+    assert "::error file=" in proc.stdout
+    assert "title=repro.analysis[private-reach-in]" in proc.stdout
+
+
+def test_cli_github_output_clean_tree(tmp_path):
+    _write(tmp_path, "benchmarks/b.py", "x = 1\n")
+    proc = _cli(str(tmp_path), "--output", "github")
+    assert proc.returncode == 0
+    assert "::error" not in proc.stdout
+    assert "repro.analysis: OK" in proc.stdout

@@ -1,0 +1,246 @@
+"""repro.analysis.project: the whole-program model the cross-module rules
+ride on -- module naming, import resolution (aliases + relative imports),
+call-graph edges through wrappers, hot-path reachability, the
+single-writer caller check, and the buffer-donation fixpoint."""
+
+from pathlib import Path
+
+from repro.analysis.core import _load, collect_files
+from repro.analysis.project import Project, as_project, module_name
+
+
+def _write(tmp_path: Path, rel: str, source: str) -> Path:
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(source)
+    return p
+
+
+def _project(tmp_path: Path) -> Project:
+    ctxs = []
+    for p in collect_files([str(tmp_path)]):
+        ctx, err = _load(p)
+        assert err is None, err
+        ctxs.append(ctx)
+    return Project(ctxs)
+
+
+# ------------------------------------------------------------ module naming
+
+
+def test_module_name_anchors_at_src(tmp_path):
+    ctx, _ = _load(_write(tmp_path, "src/repro/etl/engines.py", "x = 1\n"))
+    assert module_name(ctx) == "repro.etl.engines"
+
+
+def test_module_name_strips_package_init(tmp_path):
+    ctx, _ = _load(_write(tmp_path, "src/repro/etl/__init__.py", "x = 1\n"))
+    assert module_name(ctx) == "repro.etl"
+
+
+# -------------------------------------------------------- import resolution
+
+
+def test_resolve_from_import_alias(tmp_path):
+    proj = _project(
+        _write(
+            tmp_path,
+            "src/repro/etl/e.py",
+            "from repro.kernels.ops import dmm_apply_columnar as X\n"
+            "import numpy as np\n"
+            "import jax.numpy\n",
+        ).parent.parents[2]
+    )
+    mod = proj.modules["repro.etl.e"]
+    assert mod.resolve("X") == "repro.kernels.ops.dmm_apply_columnar"
+    assert mod.resolve("np.asarray") == "numpy.asarray"
+    # `import jax.numpy` binds only the root name
+    assert mod.resolve("jax.numpy.asarray") == "jax.numpy.asarray"
+
+
+def test_resolve_relative_import(tmp_path):
+    _write(
+        tmp_path,
+        "src/repro/etl/engines.py",
+        "from ..kernels.ops import dmm_apply\n",
+    )
+    _write(tmp_path, "src/repro/etl/__init__.py", "from .metl import METLApp\n")
+    proj = _project(tmp_path)
+    assert (
+        proj.modules["repro.etl.engines"].resolve("dmm_apply")
+        == "repro.kernels.ops.dmm_apply"
+    )
+    # a package __init__ anchors level 1 at the package itself
+    assert proj.modules["repro.etl"].resolve("METLApp") == "repro.etl.metl.METLApp"
+
+
+def test_resolve_top_level_def(tmp_path):
+    proj = _project(
+        _write(
+            tmp_path, "src/repro/etl/e.py", "def densify(plan, evs):\n    pass\n"
+        ).parent.parents[2]
+    )
+    assert proj.modules["repro.etl.e"].resolve("densify") == "repro.etl.e.densify"
+
+
+# ---------------------------------------------------------------- call graph
+
+
+def test_call_edge_through_import(tmp_path):
+    _write(
+        tmp_path,
+        "src/repro/kernels/ops.py",
+        "def dmm_apply(v, m):\n    return v\n",
+    )
+    _write(
+        tmp_path,
+        "src/repro/etl/e.py",
+        "from repro.kernels.ops import dmm_apply as launch\n"
+        "def wrapper(v, m):\n"
+        "    return launch(v, m)\n",
+    )
+    proj = _project(tmp_path)
+    assert "repro.kernels.ops.dmm_apply" in proj.calls["repro.etl.e.wrapper"]
+    assert "repro.etl.e.wrapper" in proj.callers["repro.kernels.ops.dmm_apply"]
+
+
+def test_attribute_call_links_by_bare_name(tmp_path):
+    # self.engine.dispatch(...) cannot be resolved exactly: the model links
+    # it to every known dispatch (deliberate over-approximation)
+    _write(
+        tmp_path,
+        "src/repro/etl/engines.py",
+        "class FusedEngine:\n"
+        "    def dispatch(self, dense):\n"
+        "        return dense\n",
+    )
+    _write(
+        tmp_path,
+        "src/repro/etl/metl.py",
+        "class METLApp:\n"
+        "    def consume(self, events):\n"
+        "        return self.engine.dispatch(events)\n",
+    )
+    proj = _project(tmp_path)
+    assert (
+        "repro.etl.engines.FusedEngine.dispatch"
+        in proj.calls["repro.etl.metl.METLApp.consume"]
+    )
+
+
+def test_nested_defs_attribute_to_owner(tmp_path):
+    proj = _project(
+        _write(
+            tmp_path,
+            "src/repro/kernels/k.py",
+            "def build():\n"
+            "    def inner(x):\n"
+            "        return helper(x)\n"
+            "    return inner\n"
+            "def helper(x):\n"
+            "    return x\n",
+        ).parent.parents[2]
+    )
+    # inner is not a model function; its call edge belongs to build
+    assert "repro.kernels.k.build.inner" not in proj.functions
+    assert "repro.kernels.k.helper" in proj.calls["repro.kernels.k.build"]
+
+
+# -------------------------------------------------------------- reachability
+
+
+def test_hot_path_reaches_through_helpers(tmp_path):
+    proj = _project(
+        _write(
+            tmp_path,
+            "src/repro/etl/e.py",
+            "def dispatch(dense):\n"
+            "    return _stage(dense)\n"
+            "def _stage(dense):\n"
+            "    return _deep(dense)\n"
+            "def _deep(dense):\n"
+            "    return dense\n"
+            "def offline(report):\n"
+            "    return report\n",
+        ).parent.parents[2]
+    )
+    hot = proj.hot_path()
+    assert {"repro.etl.e.dispatch", "repro.etl.e._stage", "repro.etl.e._deep"} <= hot
+    assert "repro.etl.e.offline" not in hot
+
+
+def test_only_called_from_resolves_wrappers(tmp_path):
+    proj = _project(
+        _write(
+            tmp_path,
+            "src/repro/core/state.py",
+            "class StateCoordinator:\n"
+            "    def apply(self, event):\n"
+            "        self._log(event)\n"
+            "    def _log(self, event):\n"
+            "        self.control_log.append(event)\n"
+            "def open_helper(coord, ev):\n"
+            "    coord.control_log.append(ev)\n",
+        ).parent.parents[2]
+    )
+    apply_q = "repro.core.state.StateCoordinator.apply"
+    assert proj.only_called_from("repro.core.state.StateCoordinator._log", apply_q)
+    # no callers at all = an open entry point, NOT apply-private
+    assert not proj.only_called_from("repro.core.state.open_helper", apply_q)
+
+
+# ------------------------------------------------------------- donation map
+
+
+def test_donation_factory_and_wrapper_fixpoint(tmp_path):
+    _write(
+        tmp_path,
+        "src/repro/kernels/ops.py",
+        "import functools\n"
+        "import jax\n"
+        "@functools.lru_cache(maxsize=None)\n"
+        "def _prog(donate: bool):\n"
+        "    return jax.jit(lambda p: p, donate_argnums=(0,) if donate else ())\n"
+        "def dmm_apply(packed, table):\n"
+        "    return _prog(True)(packed, table)\n",
+    )
+    _write(
+        tmp_path,
+        "src/repro/etl/e.py",
+        "from repro.kernels.ops import dmm_apply\n"
+        "def consume(buf, table):\n"
+        "    return dmm_apply(buf, table)\n",
+    )
+    proj = _project(tmp_path)
+    assert proj.factories["repro.kernels.ops._prog"] == (0,)
+    # the fixpoint propagates position 0 through both wrapper layers
+    assert proj.functions["repro.kernels.ops.dmm_apply"].donates == {0: "packed"}
+    assert proj.functions["repro.etl.e.consume"].donates == {0: "buf"}
+
+
+def test_donation_module_level_program(tmp_path):
+    proj = _project(
+        _write(
+            tmp_path,
+            "src/repro/kernels/p.py",
+            "import jax\n"
+            "f = jax.jit(lambda x: x, donate_argnums=(0, 2))\n",
+        ).parent.parents[2]
+    )
+    assert proj.programs["repro.kernels.p.f"] == (0, 2)
+
+
+# ------------------------------------------------------- Sequence protocol
+
+
+def test_project_is_a_filectx_sequence(tmp_path):
+    _write(tmp_path, "src/repro/etl/a.py", "x = 1\n")
+    _write(tmp_path, "src/repro/etl/b.py", "y = 2\n")
+    proj = _project(tmp_path)
+    assert len(proj) == 2
+    assert {c.path.name for c in proj} == {"a.py", "b.py"}
+    assert proj[0].tree is not None
+    # every ctx knows its module (set by Project.__init__)
+    assert all(c.module is not None for c in proj)
+    # as_project is the identity on an existing Project
+    assert as_project(proj) is proj

@@ -476,7 +476,7 @@ def test_dense_chunk_exposes_pinned_epoch():
     assert epoch == coord.registry.state
     ev, _, _ = _evolve_event(coord.registry)
     coord.apply(ev)  # evicts + bumps
-    assert dense.epoch == epoch == coord.registry.state - 1
+    assert dense.epoch == epoch == coord.registry.state - 1  # metl: allow[epoch-pin-escape] this test IS the pin: asserting the in-flight chunk's epoch survives the mutation
     # the in-flight chunk still maps, against its own epoch's plan
     rows = app.engine.emit(app.engine.dispatch(dense))
     assert len(rows) > 0

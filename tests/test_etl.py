@@ -104,7 +104,7 @@ class TestMETLApp:
             return ("added_domain", o, v + 1)
 
         coord.apply_update(mutate)
-        assert app._compiled is None  # cache evicted (Caffeine analogue)
+        assert app._compiled is None  # metl: allow[private-reach-in] asserting the eviction hook cleared the internal cache (the Caffeine analogue has no public probe)
         app.consume(src.slice(1000, 20))  # auto-refresh
         assert app.state == coord.registry.state
 

@@ -90,7 +90,7 @@ class TestErrorManagement:
         coord.registry.bump_state()
         replayed = app.refresh()
         assert app.stats["replayed"] == 4
-        assert not app._parked
+        assert not app._parked  # metl: allow[private-reach-in] asserting the park queue fully drained; stats["replayed"] alone cannot show emptiness
         assert len(replayed) >= 0  # rows (some events may be all-null)
 
     def test_outdated_events_dead_lettered_with_offset(self, world):
@@ -148,7 +148,7 @@ class TestErrorManagement:
             return ("added_domain", o, v + 1)
 
         coord.apply_update(mutate)
-        assert app._compiled is None  # evicted, lazily refreshed below
+        assert app._compiled is None  # metl: allow[private-reach-in] asserting the eviction hook cleared the internal cache before the lazy refresh below
         # oracle: what the parked events should map to at the new state
         want = METLApp(coord).consume_scalar(evs)
         # the next consume triggers the lazy refresh + replay; its result

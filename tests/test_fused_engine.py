@@ -162,12 +162,12 @@ def test_parked_replay_after_state_bump_uses_rebuilt_engine():
         e.state += 1  # from the app's future
     app.consume(events)
     assert app.stats["parked"] == 5
-    assert app._fused is not None
-    old_state = app._fused.state
+    assert app._fused is not None  # metl: allow[private-reach-in] asserting the cached-plan lifecycle itself (no public probe for the internal cache)
+    old_state = app._fused.state  # metl: allow[private-reach-in] asserting the cached-plan lifecycle itself (no public probe for the internal cache)
     coord.registry.bump_state()
     replayed = app.refresh()  # rebuilds FusedDMM, replays parked events
     assert app.stats["replayed"] == 5
-    assert app._fused.state == old_state + 1
+    assert app._fused.state == old_state + 1  # metl: allow[private-reach-in] asserting the cached-plan lifecycle itself (no public probe for the internal cache)
     # replayed rows must match the scalar oracle on the same events
     fresh = METLApp(coord, engine="fused")
     for e in events[:5]:
@@ -198,7 +198,7 @@ def test_constant_dispatches_per_chunk():
         assert app.stats["dispatches"] - before == 1
     # and the module-level counter agrees (no hidden per-block calls)
     before_ops = ops.dispatch_count
-    app._seen.clear()
+    app._seen.clear()  # metl: allow[private-reach-in] deliberate dedup reset so the re-consumed chunk is not swallowed; reset_dedup() would also reset stats under test
     app.consume(src.slice(0, 100))
     assert ops.dispatch_count - before_ops == 1
 
