@@ -1,13 +1,38 @@
-"""Paper Figure 5 / §5.2-5.3: compaction ratios of the two DMM strategies.
+"""Paper Figure 5 / §5.2-5.3 compaction ratios + the plan-lifecycle soak.
 
-Reports the >99% / >99.9% claims at paper scale (>10k extraction attributes,
-~1k CDM attributes, 10 versions per schema) and the Figure-5 worked example
-(30 -> 7 elements balanced, 30 -> 5+1 aggressive).
+Two halves:
+
+1. **Compaction ratios** — the >99% / >99.9% claims at paper scale (>10k
+   extraction attributes, ~1k CDM attributes, 10 versions per schema) and
+   the Figure-5 worked example (30 -> 7 balanced, 30 -> 5+1 aggressive).
+
+2. **Production-scale soak** — an A/B/C run of the epoched plan lifecycle
+   (``repro.etl.plan.PlanManager``) at ``soak_config()`` scale (80 schemas
+   x 6 versions ~= 480 live version columns; a 16x3 miniature under
+   ``--smoke``) under continuous schema churn:
+
+   * arm A: incremental recompaction (``recompile_columns`` + splice),
+   * arm B: full rebuild on every evolution (the bit-exactness oracle),
+   * arm C: incremental + hot/cold tiering pinned to latest versions only.
+
+   Gates (GATE_FAILURES, fail the harness): A and B emit identical row
+   keys in order (zero dropped/duplicated rows across every cutover), C
+   matches A up to row order, C's device-resident bytes are strictly
+   below A's, and — full size only — A's amortised churn rebuild time and
+   p99 chunk latency beat/track B's.  Throughputs, the amortised rebuild
+   rate and the compaction ratio land in PERF_METRICS so
+   ``scripts/perf_diff.py`` tracks them across trajectory artifacts.
+
+All plans here are acquired through the PlanManager — benchmarks never
+construct or publish a fused plan directly (the ``plan-publish-single-site``
+analyzer rule holds this door shut).
 """
 
 from __future__ import annotations
 
 import time
+
+import numpy as np
 
 from repro.core.dmm import (
     compaction_ratio,
@@ -16,21 +41,36 @@ from repro.core.dmm import (
     transform_to_dpm,
     transform_to_dusb,
 )
-from repro.core.synthetic import ScenarioConfig, build_scenario
+from repro.core.state import StateCoordinator
+from repro.core.synthetic import (
+    ScenarioConfig,
+    build_scenario,
+    churn_schedule,
+    soak_config,
+)
+from repro.etl import EventSource, METLApp, PlanManager, TieringPolicy
+
+# harness contract (benchmarks/run.py): gates fail the run, perf metrics
+# feed scripts/perf_diff.py across BENCH_*.json artifacts
+GATE_FAILURES: list = []
+PERF_METRICS: dict = {}
 
 
-def run() -> list:
+# -- §5.2/§5.3 compaction ratios ----------------------------------------------
+def _ratio_rows(smoke: bool) -> list:
     rows = []
-    # paper-scale scenario: 100 schemas x 10 versions x ~10 attrs = >10k
-    # extraction attributes; 1k CDM attributes in 40 entities
-    t0 = time.perf_counter()
-    sc = build_scenario(
+    cfg = (
         ScenarioConfig(
+            n_schemas=30, versions_per_schema=5, attrs_per_version=8,
+            n_entities=10, cdm_attrs=20, seed=42,
+        )
+        if smoke
+        else ScenarioConfig(
             n_schemas=100, versions_per_schema=10, attrs_per_version=10,
             n_entities=40, cdm_attrs=25, seed=42,
         )
     )
-    build_s = time.perf_counter() - t0
+    sc = build_scenario(cfg)
     m, n = sc.shape
     t0 = time.perf_counter()
     dpm = transform_to_dpm(sc.matrix)
@@ -43,7 +83,12 @@ def run() -> list:
     rows.append(("compaction/matrix_elements", 0.0, f"{m}x{n}={m*n}"))
     rows.append(("compaction/dpm_transform", t_dpm, f"ratio={r_dpm:.5f} stored={dpm_size(dpm)}"))
     rows.append(("compaction/dusb_transform", t_dusb, f"ratio={r_dusb:.5f} stored={dusb_size(dusb)}"))
-    assert r_dpm > 0.99 and r_dusb > 0.99, "paper claim >99% violated"
+    PERF_METRICS["compaction_ratio_dpm"] = r_dpm
+    if not smoke and (r_dpm <= 0.99 or r_dusb <= 0.99):
+        GATE_FAILURES.append(
+            f"paper compaction claim >99% violated at paper scale "
+            f"(dpm {r_dpm:.5f}, dusb {r_dusb:.5f})"
+        )
 
     # Figure-5 worked example numbers
     from tests_fixtures_fig5 import fig5  # local helper below
@@ -56,6 +101,167 @@ def run() -> list:
     rows.append(("compaction/fig5_dpm", 0.0, f"30->{dpm_size(d)} (paper: 7)"))
     rows.append(("compaction/fig5_dusb", 0.0, f"30->{stored_u}+{nulls_u} (paper: 5+1)"))
     return rows
+
+
+# -- the plan-lifecycle soak --------------------------------------------------
+def _soak_shapes(smoke: bool):
+    """(config, n_chunks, chunk_size, churn_steps, every)."""
+    if smoke:
+        return soak_config(smoke=True), 12, 64, 6, 2
+    return soak_config(), 36, 256, 16, 2
+
+
+def _soak_arm(
+    cfg: ScenarioConfig,
+    *,
+    n_chunks: int,
+    size: int,
+    churn: int,
+    every: int,
+    incremental: bool = True,
+    tiering: TieringPolicy = None,
+) -> dict:
+    """One soak arm: fresh world, PlanManager-served fused engine, timed
+    per-chunk consume with schema churn applied at chunk boundaries."""
+    sc = build_scenario(cfg)
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    mgr = PlanManager(
+        kind="fused", coordinator=coord, incremental=incremental, tiering=tiering
+    )
+    app = METLApp(coord, plan_manager=mgr)  # builds + serves epoch 1
+    t_first = mgr.info()["total_rebuild_s"]
+    # identical schedule content across arms: same fresh registry, same seed
+    sched = churn_schedule(
+        coord.registry, steps=churn, first_chunk=1, every=every, seed=13
+    )
+    src = EventSource(sc.registry, seed=5)
+    lat, keys = [], []
+    t0 = time.perf_counter()
+    for k in range(n_chunks):
+        ev = sched.get(k)
+        if ev is not None:
+            coord.apply(ev)
+        t1 = time.perf_counter()
+        rows = app.consume(src.slice_columnar(k * size, size))
+        lat.append(time.perf_counter() - t1)
+        keys.extend(r[3] for r in rows)
+    total_s = time.perf_counter() - t0
+    minfo = mgr.info()
+    out = {
+        "keys": keys,
+        "events_per_s": (n_chunks * size) / total_s,
+        "mean_ms": float(np.mean(lat) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "first_build_ms": t_first * 1e3,
+        "churn_rebuild_ms": (minfo["total_rebuild_s"] - t_first) * 1e3,
+        "minfo": minfo,
+        "einfo": app.engine.info(),
+        "tier_misses": int(app.stats["tier_misses"]),
+    }
+    mgr.close()
+    return out
+
+
+def _soak_rows(smoke: bool) -> list:
+    cfg, n_chunks, size, churn, every = _soak_shapes(smoke)
+    inc = _soak_arm(
+        cfg, n_chunks=n_chunks, size=size, churn=churn, every=every,
+        incremental=True,
+    )
+    full = _soak_arm(
+        cfg, n_chunks=n_chunks, size=size, churn=churn, every=every,
+        incremental=False,
+    )
+    tier = _soak_arm(
+        cfg, n_chunks=n_chunks, size=size, churn=churn, every=every,
+        incremental=True,
+        tiering=TieringPolicy(min_hits=10**9, pin_latest=True),
+    )
+
+    # -- correctness gates (always) ------------------------------------------
+    if not inc["keys"]:
+        GATE_FAILURES.append("soak emitted zero rows")
+    if inc["keys"] != full["keys"]:
+        GATE_FAILURES.append(
+            f"incremental soak dropped/duplicated/reordered rows vs the "
+            f"full-rebuild oracle ({len(inc['keys'])} vs {len(full['keys'])} keys)"
+        )
+    if sorted(tier["keys"]) != sorted(inc["keys"]):
+        GATE_FAILURES.append(
+            f"tiered soak lost rows vs the all-hot plan "
+            f"({len(tier['keys'])} vs {len(inc['keys'])} keys)"
+        )
+    if inc["minfo"]["incremental_rebuilds"] != churn:
+        GATE_FAILURES.append(
+            f"expected {churn} incremental rebuilds, saw "
+            f"{inc['minfo']['incremental_rebuilds']} "
+            f"(epoch {inc['minfo']['plan_epoch']})"
+        )
+    if full["minfo"]["incremental_rebuilds"] != 0:
+        GATE_FAILURES.append(
+            "full-rebuild oracle arm took the incremental path "
+            f"({full['minfo']['incremental_rebuilds']} times)"
+        )
+    # -- residency gates (deterministic: only latest versions stay hot) -----
+    if tier["minfo"]["cold_columns"] == 0:
+        GATE_FAILURES.append("tiering policy kept every column resident")
+    if tier["einfo"]["bytes_resident"] >= inc["einfo"]["bytes_resident"]:
+        GATE_FAILURES.append(
+            f"tiered bytes_resident {tier['einfo']['bytes_resident']} not "
+            f"below all-hot {inc['einfo']['bytes_resident']}"
+        )
+    if tier["tier_misses"] == 0:
+        GATE_FAILURES.append("tiered soak never exercised the cold path")
+    # -- latency/amortisation gates (full size only: smoke is jitter-bound) --
+    if not smoke:
+        if inc["churn_rebuild_ms"] >= full["churn_rebuild_ms"]:
+            GATE_FAILURES.append(
+                f"amortised incremental rebuild ({inc['churn_rebuild_ms']:.0f} ms "
+                f"over {churn} cutovers) not cheaper than full rebuilds "
+                f"({full['churn_rebuild_ms']:.0f} ms)"
+            )
+        if inc["p99_ms"] > 1.5 * full["p99_ms"] + 10.0:
+            GATE_FAILURES.append(
+                f"incremental soak p99 chunk latency {inc['p99_ms']:.1f} ms "
+                f"regressed vs full-rebuild baseline {full['p99_ms']:.1f} ms"
+            )
+
+    PERF_METRICS["soak_consume_incremental"] = inc["events_per_s"]
+    PERF_METRICS["soak_consume_full_rebuild"] = full["events_per_s"]
+    PERF_METRICS["soak_consume_tiered"] = tier["events_per_s"]
+    PERF_METRICS["soak_rebuilds_per_s"] = (inc["minfo"]["rebuilds"] - 1) / max(
+        inc["churn_rebuild_ms"] / 1e3, 1e-9
+    )
+
+    shape = f"{n_chunks}x{size}ev_{churn}churn"
+    rows = []
+    rows.append((
+        f"compaction/soak_incremental_{shape}",
+        inc["mean_ms"] * 1e3,
+        f"{inc['events_per_s']:.0f} events/s, p99 {inc['p99_ms']:.2f} ms/chunk, "
+        f"{inc['minfo']['rebuilds']} builds ({inc['minfo']['incremental_rebuilds']} "
+        f"incremental), churn rebuilds {inc['churn_rebuild_ms']:.1f} ms",
+    ))
+    rows.append((
+        f"compaction/soak_full_rebuild_{shape}",
+        full["mean_ms"] * 1e3,
+        f"{full['events_per_s']:.0f} events/s, p99 {full['p99_ms']:.2f} ms/chunk, "
+        f"churn rebuilds {full['churn_rebuild_ms']:.1f} ms",
+    ))
+    rows.append((
+        f"compaction/soak_tiered_{shape}",
+        tier["mean_ms"] * 1e3,
+        f"{tier['events_per_s']:.0f} events/s, "
+        f"bytes_resident {tier['einfo']['bytes_resident']}/"
+        f"{inc['einfo']['bytes_resident']} B, "
+        f"{tier['minfo']['cold_columns']} cold cols, "
+        f"{tier['tier_misses']} tier misses",
+    ))
+    return rows
+
+
+def run(smoke: bool = False) -> list:
+    return _ratio_rows(smoke) + _soak_rows(smoke)
 
 
 # -- minimal local copy of the Figure-5 fixture (keeps benchmarks standalone)

@@ -1,7 +1,7 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--smoke] \
-        [--artifact DIR]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME[,NAME...]] \
+        [--smoke] [--artifact DIR]
 
 Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
 
@@ -45,7 +45,9 @@ MODULES = [
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None, metavar="NAMES",
+                    help="comma-separated module-name substrings, e.g. "
+                         "'mapping,compaction'")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, CI-sized (modules that support it)")
     ap.add_argument("--artifact", default=None, metavar="DIR",
@@ -57,8 +59,9 @@ def main() -> None:
     perf_metrics = {}
     engine_metrics = []
     gate_failures = []
+    only = [s for s in (args.only or "").split(",") if s]
     for modname in MODULES:
-        if args.only and args.only not in modname:
+        if only and not any(s in modname for s in only):
             continue
         try:
             mod = __import__(modname)

@@ -4,7 +4,7 @@
 #     bash scripts/ci.sh
 #
 # 1. the static invariant analyzer (python -m repro.analysis) over
-#    src/benchmarks/examples: twelve rules on a whole-program project
+#    src/benchmarks/examples: thirteen rules on a whole-program project
 #    model (src/repro/analysis/project.py: import-aware symbol
 #    resolution, an approximate call graph, hot-path reachability, and a
 #    donate_argnums dataflow map).  The per-file rules -- private-reach-in
@@ -23,7 +23,10 @@
 #    epoch-pin-escape (DenseChunk/ColumnarDense always carry their plan
 #    pin; no plan read through a chunk across a coordinator mutation),
 #    transfer-accounting (host->device conversions on the per-chunk path
-#    only at the accounted _to_device site), and the waiver audits
+#    only at the accounted _to_device site), plan-publish-single-site
+#    (only repro.etl.plan / repro.core.dmm_jax may call the fused-plan
+#    builders or cut a PlanPublished event -- every other layer acquires
+#    epoch leases through PlanManager), and the waiver audits
 #    (bad-waiver, unused-waiver).  Findings render as ::error GitHub
 #    annotations in CI logs; the JSON report is written next to the bench
 #    artifact (ANALYSIS.json).  Waivers are inline '# metl:
@@ -46,21 +49,28 @@
 #    deferred evolution + VersionDeleted), applied at chunk boundaries by
 #    the single-writer coordinator, with the control-log replay
 #    determinism check (the script asserts state + DPM bit-exactness);
-# 6. a tiny-shape run of the mapping benchmark so the fused- and
-#    sharded-engine perf paths (kernel, shard_map dispatcher, consume,
-#    sync-vs-async pipeline, columnar + device densify) can't rot silently
-#    even when no test exercises the timing harness.  bench_mapping itself
-#    exits non-zero -- failing this gate -- if the fused engine's
-#    dispatches-per-chunk regress above 1 (direct consume, device densify,
-#    async pipeline, or any cluster instance across the epoch-transition
-#    A/B), if device densify makes more than ONE host->device transfer per
-#    chunk, if the columnar densify is SLOWER than the legacy dict walk at
-#    the bench's default chunk size, if any densify path (columnar, device,
-#    sharded-device, pipelined-device) diverges bit-wise from its host
-#    oracle, or if the epoch transition drops/duplicates rows (in-band vs
-#    out-of-band oracle, 4-instance cluster vs single instance).  The run
-#    goes through benchmarks/run.py --artifact, which writes a
-#    BENCH_<ts>.json trajectory artifact;
+# 6. a tiny-shape run of the mapping + compaction benchmarks so the
+#    fused- and sharded-engine perf paths (kernel, shard_map dispatcher,
+#    consume, sync-vs-async pipeline, columnar + device densify) and the
+#    epoched plan lifecycle can't rot silently even when no test exercises
+#    the timing harness.  bench_mapping itself exits non-zero -- failing
+#    this gate -- if the fused engine's dispatches-per-chunk regress above
+#    1 (direct consume, device densify, async pipeline, or any cluster
+#    instance across the epoch-transition A/B), if device densify makes
+#    more than ONE host->device transfer per chunk, if the columnar
+#    densify is SLOWER than the legacy dict walk at the bench's default
+#    chunk size, if any densify path (columnar, device, sharded-device,
+#    pipelined-device) diverges bit-wise from its host oracle, or if the
+#    epoch transition drops/duplicates rows (in-band vs out-of-band
+#    oracle, 4-instance cluster vs single instance).  bench_compaction
+#    gates the PlanManager soak: incremental recompaction must emit
+#    row-keys identical to the full-rebuild oracle across every churn
+#    cutover, the latest-pinned tiering arm must match up to row order
+#    while holding strictly fewer device-resident bytes, and (full size
+#    only) the amortised incremental rebuild time and p99 chunk latency
+#    must beat/track the full-rebuild baseline.  The run goes through
+#    benchmarks/run.py --artifact, which writes a BENCH_<ts>.json
+#    trajectory artifact;
 # 7. the perf-trajectory diff: scripts/perf_diff.py compares the fresh
 #    artifact's events/s metrics against the last comparable artifact
 #    checked in under benchmarks/trajectory/ and fails on a >20% drop
@@ -108,8 +118,8 @@ python examples/pipeline_stream.py --chunks 4 --prompts 500
 echo "== mid-stream schema evolution (in-band control + log replay) =="
 python examples/schema_evolution.py --steps 4
 
-echo "== benchmark smoke (fused/sharded engines, device densify, pipeline) =="
-python -m benchmarks.run --only mapping --smoke --artifact "$BENCH_DIR"
+echo "== benchmark smoke (engines, device densify, pipeline, plan soak) =="
+python -m benchmarks.run --only mapping,compaction --smoke --artifact "$BENCH_DIR"
 
 echo "== perf trajectory diff (vs benchmarks/trajectory, >20% drop fails) =="
 python scripts/perf_diff.py "$BENCH_DIR" --baseline benchmarks/trajectory

@@ -80,6 +80,16 @@ dataflow map, built ONCE per run):
     Motivation: PR 6's one-transfer-per-chunk contract, enforced by
     reachability instead of by whichever configurations the bench runs.
 
+``plan-publish-single-site``
+    Only ``repro.etl.plan`` (the PlanManager) and ``repro.core.dmm_jax``
+    (the lowering layer) may call the fused-plan builders
+    (``compile_fused`` / ``compile_fused_sharded`` / ``recompile_columns``
+    / ``splice_fused``), construct ``FusedDMM``/``ShardedFusedDMM``, or
+    cut a ``PlanPublished`` event; ``compile_dpm`` stays free.
+    Motivation: PR 9's epoch counter, tiering residency, rebuild
+    accounting and PlanPublished replay all hang off one build path -- a
+    hand-built plan is an unmanaged epoch that dodges every contract.
+
 Waivers: append ``# metl: allow[rule-id] reason`` to the offending line
 (or the line above as a standalone comment; on a ``def`` line it covers
 the whole function).  The reason is mandatory -- a reasonless waiver or an

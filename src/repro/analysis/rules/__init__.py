@@ -8,6 +8,7 @@ from . import (  # noqa: F401
     hot_loop,
     jit_cache,
     kernel_parity,
+    plan_publish,
     private_reach_in,
     single_writer,
     transfer_accounting,

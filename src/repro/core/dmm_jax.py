@@ -93,6 +93,8 @@ __all__ = [
     "ShardedFusedDMM",
     "compile_fused_sharded",
     "global_uid_tables",
+    "recompile_columns",
+    "splice_fused",
 ]
 
 LANE = 128  # TPU vector lane width; last-dim tiles must be multiples of this
@@ -272,7 +274,10 @@ class FusedColumn:
     ``uid_col`` dense tables (uids are globally unique), with ``col_id``
     naming this column in those tables.  ``block_ids`` are the global
     block-table rows of the column super-set iDCPM_v^o, in compile (column)
-    order.
+    order.  ``uids_arr`` carries the column's uids in slot order as one
+    int64 array so an incremental recompile (:func:`splice_fused`) can
+    rebuild the plan-global uid tables with two scatters instead of
+    re-walking every column's ``uid_pos`` dict.
     """
 
     o: int
@@ -281,6 +286,7 @@ class FusedColumn:
     uid_pos: Dict[int, int]
     block_ids: np.ndarray  # int32 (k,): rows of FusedDMM.src2d
     col_id: int = -1  # position of this column in the plan's column order
+    uids_arr: Optional[np.ndarray] = None  # int64 (n_in,): uids in slot order
 
 
 @dataclasses.dataclass
@@ -380,6 +386,7 @@ def _fused_tables(
             uid_pos=uid_pos,
             block_ids=np.asarray(ids, dtype=np.int32),
             col_id=len(columns),
+            uids_arr=np.asarray(sv.uids, dtype=np.int64),
         )
     # plan-global uid tables for the fully-vectorised densification: every
     # attribute uid is globally unique (one registry counter), so one dense
@@ -419,19 +426,13 @@ def _fused_tables(
     )
 
 
-def compile_fused(
-    compiled: CompiledDMM, registry: Registry, lane: int = LANE
-) -> FusedDMM:
-    """Flatten a :class:`CompiledDMM` into the fused block table.
-
-    Compiled once per state (alongside the per-block form) and cached until
-    the next state bump evicts it -- the fused analogue of the paper's
-    Caffeine-cached hashmap of column super-sets.
-    """
+def _assemble_replicated(parts: Tuple, state: int) -> FusedDMM:
+    """Place a host-side table bundle (``_fused_tables`` layout) on the
+    default device as a replicated :class:`FusedDMM`."""
     (table, routes, n_out, columns, n_in_pad, width, n_blocks, uid_slot,
-     uid_col, cb_start, cb_count) = _fused_tables(compiled, registry, lane)
+     uid_col, cb_start, cb_count) = parts
     return FusedDMM(
-        state=compiled.state,
+        state=state,
         n_in_pad=n_in_pad,
         width=width,
         n_blocks=n_blocks,
@@ -445,6 +446,22 @@ def compile_fused(
         col_block_count=cb_count,
         uid_slot_dev=jnp.asarray(uid_slot),
         uid_col_dev=jnp.asarray(uid_col),
+    )
+
+
+def compile_fused(
+    compiled: CompiledDMM, registry: Registry, lane: int = LANE
+) -> FusedDMM:
+    """Flatten a :class:`CompiledDMM` into the fused block table.
+
+    Compiled once per state (alongside the per-block form) and cached until
+    the next state bump evicts it -- the fused analogue of the paper's
+    Caffeine-cached hashmap of column super-sets.  This full rebuild is the
+    bit-exactness ORACLE for the incremental path
+    (:func:`recompile_columns` / :func:`splice_fused`).
+    """
+    return _assemble_replicated(
+        _fused_tables(compiled, registry, lane), compiled.state
     )
 
 
@@ -530,8 +547,27 @@ def compile_fused_sharded(
         if mesh is None:
             raise ValueError("need a mesh or an explicit n_shards")
         n_shards = mesh.shape[axis]
+    return _assemble_sharded(
+        _fused_tables(compiled, registry, lane),
+        compiled.state,
+        mesh=mesh,
+        n_shards=n_shards,
+        axis=axis,
+    )
+
+
+def _assemble_sharded(
+    parts: Tuple,
+    state: int,
+    *,
+    mesh: Optional[Mesh],
+    n_shards: int,
+    axis: str = "data",
+) -> ShardedFusedDMM:
+    """Partition a host-side table bundle over ``n_shards`` and place each
+    slice (``device_put`` under a mesh, default device otherwise)."""
     (table, routes, n_out, columns, n_in_pad, width, n_blocks, uid_slot,
-     uid_col, cb_start, cb_count) = _fused_tables(compiled, registry, lane)
+     uid_col, cb_start, cb_count) = parts
     per = -(-max(n_blocks, 1) // n_shards)
     per_pad = max(SUBLANE, -(-per // SUBLANE) * SUBLANE)
     src3d_np = np.full((n_shards, per_pad, width), -1, dtype=np.int32)
@@ -546,7 +582,7 @@ def compile_fused_sharded(
     else:
         src3d = jnp.asarray(src3d_np)
     return ShardedFusedDMM(
-        state=compiled.state,
+        state=state,
         n_shards=n_shards,
         blocks_per_shard=per,
         n_in_pad=n_in_pad,
@@ -564,3 +600,213 @@ def compile_fused_sharded(
         uid_slot_dev=jnp.asarray(uid_slot),
         uid_col_dev=jnp.asarray(uid_col),
     )
+
+
+# ---------------------------------------------------------------------------
+# Incremental recompaction: rebuild only the touched columns (PlanManager)
+# ---------------------------------------------------------------------------
+
+
+def recompile_columns(
+    compiled: CompiledDMM,
+    dpm: DPM,
+    registry: Registry,
+    touched,
+    *,
+    lane: int = LANE,
+) -> CompiledDMM:
+    """Incrementally re-lower a DPM after a localised change.
+
+    ``touched`` is the set of incoming ``(schema o, version v)`` columns
+    whose mapping paths (or attribute lists) changed since ``compiled`` was
+    built -- typically the DPM diff a :class:`repro.etl.plan.PlanManager`
+    computes across a ``SchemaEvolved`` / ``MatrixEdit``.  Blocks of
+    untouched columns are REUSED by block key (safe because registry
+    versions are immutable once cut: ``evolve`` re-issues kept attributes
+    with fresh uids in a NEW version, it never rewrites an existing one);
+    only touched columns pay the per-block :func:`compile_block` python
+    loop.  The caller must include in ``touched`` every column whose
+    elements changed -- an under-report reuses a stale block.
+
+    Bit-exact with a from-scratch :func:`compile_dpm` of the same DPM.
+    """
+    touched = frozenset(touched)
+    old_by_key = {
+        blk.key: blk
+        for blocks in compiled.by_column.values()
+        for blk in blocks
+    }
+    by_column: Dict[Tuple[int, int], List[CompactedBlockMap]] = {}
+    for key, elements in sorted(dpm.items()):
+        o, v, r, w = key
+        blk = old_by_key.get(key) if (o, v) not in touched else None
+        if blk is None:
+            blk = compile_block(key, elements, registry, lane)
+        by_column.setdefault((o, v), []).append(blk)
+    return CompiledDMM(state=registry.state, by_column=by_column)
+
+
+def _vectorised_uid_tables(columns) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorised twin of :func:`_uid_tables_from` over
+    :class:`FusedColumn` rows carrying ``uids_arr``: two scatters instead of
+    a per-uid dict walk.  Bit-identical because registry uids are globally
+    unique (one counter; kept attributes are re-issued with NEW uids), so no
+    uid is claimed by two columns and scatter order cannot matter."""
+    cols = [c for c in columns if c.uids_arr is not None and c.uids_arr.size]
+    if not cols:
+        return np.empty(0, dtype=np.int32), np.empty(0, dtype=np.int32)
+    all_uids = np.concatenate([c.uids_arr for c in cols])
+    sizes = np.asarray([c.uids_arr.size for c in cols], dtype=np.int64)
+    col_ids = np.asarray([c.col_id for c in cols], dtype=np.int32)
+    uid_slot = np.full(int(all_uids.max()) + 1, -1, dtype=np.int32)
+    uid_col = np.full(uid_slot.size, -1, dtype=np.int32)
+    starts = np.repeat(np.cumsum(sizes) - sizes, sizes)
+    uid_slot[all_uids] = (
+        np.arange(all_uids.size, dtype=np.int64) - starts
+    ).astype(np.int32)
+    uid_col[all_uids] = np.repeat(col_ids, sizes)
+    return uid_slot, uid_col
+
+
+def _host_table(plan) -> np.ndarray:
+    """The plan's block table as one host (n_rows >= n_blocks, W) array in
+    GLOBAL block order -- the splice's bulk-copy source.  For a sharded plan
+    the per-shard slices are re-flattened (row ``t`` lives on shard
+    ``t // per`` at local row ``t - s*per``); this is a control-plane
+    (rebuild-time) readback, never on the per-chunk path."""
+    if isinstance(plan, ShardedFusedDMM):
+        flat = np.asarray(plan.src3d).reshape(-1, plan.width)
+        per, per_pad = plan.blocks_per_shard, plan.n_blocks_pad_loc
+        t = np.arange(plan.n_blocks, dtype=np.int64)
+        s = t // per
+        return flat[s * per_pad + (t - s * per)]
+    return np.asarray(plan.src2d)
+
+
+def _spliced_tables(old, compiled: CompiledDMM, registry: Registry, touched, lane: int) -> Tuple:
+    """Build a ``_fused_tables``-layout bundle for ``compiled`` by splicing:
+    untouched columns reuse the old plan's table rows (one fancy-index bulk
+    copy) and ``FusedColumn`` metadata; only touched/new columns re-run the
+    per-block row fill and the per-uid dict build."""
+    width = lane
+    for blocks in compiled.by_column.values():
+        for blk in blocks:
+            width = max(width, blk.n_out_pad)
+    old_np = _host_table(old)
+    routes: List[Tuple[int, int]] = []
+    n_out: List[int] = []
+    columns: Dict[Tuple[int, int], FusedColumn] = {}
+    n_in_max = 1
+    reuse_new: List[int] = []  # new global row of each reused column's start
+    reuse_old: List[np.ndarray] = []  # the old block_ids being copied
+    fresh: List[Tuple[int, np.ndarray]] = []  # rebuilt (row, src) pairs
+    for (o, v), blocks in compiled.by_column.items():
+        old_col = None if (o, v) in touched else old.columns.get((o, v))
+        if old_col is not None and old_col.block_ids.size != len(blocks):
+            old_col = None  # block layout changed: rebuild this column
+        start = len(routes)
+        for blk in blocks:
+            t = len(routes)
+            routes.append((blk.key[2], blk.key[3]))
+            n_out.append(blk.n_out)
+            if old_col is None:
+                row = np.full((width,), -1, dtype=np.int32)
+                row[: blk.n_out_pad] = np.asarray(blk.src)
+                fresh.append((t, row))
+        if old_col is not None:
+            uid_pos, n_in = old_col.uid_pos, old_col.n_in
+            uids_arr = old_col.uids_arr
+            if uids_arr is None:  # plan predates uids_arr: derive once
+                uids_arr = np.fromiter(
+                    uid_pos, dtype=np.int64, count=len(uid_pos)
+                )
+            reuse_new.append(start)
+            reuse_old.append(old_col.block_ids)
+        else:
+            sv = registry.domain.get(o, v)
+            uid_pos = {u: k for k, u in enumerate(sv.uids)}
+            uids_arr = np.asarray(sv.uids, dtype=np.int64)
+            n_in = len(sv.uids)
+        n_in_max = max(n_in_max, n_in)
+        columns[(o, v)] = FusedColumn(
+            o=o,
+            v=v,
+            n_in=n_in,
+            uid_pos=uid_pos,
+            block_ids=np.arange(start, len(routes), dtype=np.int32),
+            col_id=len(columns),
+            uids_arr=uids_arr,
+        )
+    n_blocks = len(routes)
+    n_blocks_pad = max(SUBLANE, -(-max(n_blocks, 1) // SUBLANE) * SUBLANE)
+    table = np.full((n_blocks_pad, width), -1, dtype=np.int32)
+    if reuse_new:
+        new_ids = np.concatenate([
+            np.arange(s, s + ids.size, dtype=np.int64)
+            for s, ids in zip(reuse_new, reuse_old)
+        ])
+        old_ids = np.concatenate([ids.astype(np.int64) for ids in reuse_old])
+        # width can shrink when the widest column was rebuilt narrower: the
+        # truncated tail of every reused row is -1 pad by construction
+        # (width still covers each reused block's n_out_pad)
+        w = min(old_np.shape[1], width)
+        table[new_ids, :w] = old_np[old_ids, :w]
+    for t, row in fresh:
+        table[t] = row
+    uid_slot, uid_col = _vectorised_uid_tables(columns.values())
+    col_block_start = np.asarray(
+        [int(c.block_ids[0]) if c.block_ids.size else 0 for c in columns.values()],
+        dtype=np.int32,
+    )
+    col_block_count = np.asarray(
+        [c.block_ids.size for c in columns.values()], dtype=np.int32
+    )
+    return (
+        table,
+        routes,
+        np.asarray(n_out, dtype=np.int32),
+        columns,
+        pad_to_lane(n_in_max, lane),
+        width,
+        n_blocks,
+        uid_slot,
+        uid_col,
+        col_block_start,
+        col_block_count,
+    )
+
+
+def splice_fused(
+    plan,
+    compiled: CompiledDMM,
+    registry: Registry,
+    touched,
+    *,
+    lane: int = LANE,
+):
+    """Incrementally rebuild a fused plan: splice ``compiled``'s touched
+    columns into ``plan``'s block table instead of re-flattening every
+    column (the expensive per-uid / per-block python of
+    :func:`_fused_tables`).
+
+    ``plan`` is the previous epoch's :class:`FusedDMM` or
+    :class:`ShardedFusedDMM` (the result keeps the same flavour, mesh and
+    shard count); ``touched`` is the changed-column set (see
+    :func:`recompile_columns`).  Columns absent from ``compiled`` (deleted
+    versions, or columns a residency policy keeps compacted-out) simply
+    drop out of the new table; columns absent from the OLD plan are rebuilt
+    from scratch.  The whole old table is bulk-copied with one fancy-index
+    gather, so splice cost scales with the touched columns plus O(columns),
+    not with total attributes.
+
+    Bit-exact with a from-scratch :func:`compile_fused` /
+    :func:`compile_fused_sharded` of the same ``compiled`` -- the full
+    rebuild stays the oracle (asserted in tests and the compaction soak).
+    """
+    touched = frozenset(touched)
+    parts = _spliced_tables(plan, compiled, registry, touched, lane)
+    if isinstance(plan, ShardedFusedDMM):
+        return _assemble_sharded(
+            parts, compiled.state, mesh=plan.mesh, n_shards=plan.n_shards
+        )
+    return _assemble_replicated(parts, compiled.state)

@@ -192,11 +192,14 @@ class StateCoordinator:
 
         ``event`` is any object implementing the control protocol
         (:mod:`repro.etl.control`): an ``op`` of ``"freeze"`` / ``"thaw"`` /
-        ``"matrix"`` / ``"schema"``, plus ``mutate(registry) -> trigger``
-        for schema changes and ``dpm`` for matrix edits.  Schema changes run
-        the registry mutation and the Algorithm-5 automated DPM update
-        atomically, then evict every derived cache; the applied event is
-        appended to :attr:`control_log`.
+        ``"plan"`` / ``"matrix"`` / ``"schema"``, plus ``mutate(registry) ->
+        trigger`` for schema changes and ``dpm`` for matrix edits.  Schema
+        changes run the registry mutation and the Algorithm-5 automated DPM
+        update atomically, then evict every derived cache; the applied event
+        is appended to :attr:`control_log`.  ``"plan"`` events
+        (``PlanPublished``) are pure observability records: logged in epoch
+        order but bumping nothing, evicting nothing, and -- unlike
+        schema/matrix changes -- legal inside a Freeze window.
 
         During an initial-load window (``Freeze``) schema/matrix changes
         raise -- or, with ``defer_frozen=True`` (the streaming pipeline's
@@ -206,7 +209,7 @@ class StateCoordinator:
         from .dmm import auto_update_dpm
 
         op = getattr(event, "op", None)
-        if op not in ("freeze", "thaw", "matrix", "schema"):
+        if op not in ("freeze", "thaw", "plan", "matrix", "schema"):
             raise TypeError(
                 f"not a control event: {event!r} (see repro.etl.control)"
             )
@@ -217,6 +220,10 @@ class StateCoordinator:
                 self._frozen = True
             elif op == "thaw":
                 self._frozen = False
+            elif op == "plan":
+                pass  # observability record: no bump, no evict; the branch
+                # sits BEFORE the frozen gate because plan rebuilds stay
+                # legal inside a load window (data keeps flowing)
             elif self._frozen:
                 if defer_frozen:
                     # queued, NOT logged: the log records applied events only

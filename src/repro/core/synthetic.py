@@ -22,7 +22,14 @@ import numpy as np
 from .dmm import DPM, MappingMatrix, transform_to_dpm
 from .registry import Registry
 
-__all__ = ["ScenarioConfig", "Scenario", "build_scenario", "scenario_event_chunks"]
+__all__ = [
+    "ScenarioConfig",
+    "Scenario",
+    "build_scenario",
+    "churn_schedule",
+    "scenario_event_chunks",
+    "soak_config",
+]
 
 
 @dataclasses.dataclass
@@ -131,3 +138,66 @@ def scenario_event_chunks(
     src = EventSource(scenario.registry, seed=seed, **source_kwargs)
     slicer = src.slice_columnar if columnar else src.slice
     return [slicer(start + k * chunk_size, chunk_size) for k in range(n_chunks)]
+
+
+def soak_config(smoke: bool = False) -> ScenarioConfig:
+    """The plan-lifecycle soak shape (``benchmarks/bench_compaction.py``).
+
+    Full size is 80 extraction schemas x 6 versions -- ~480 live version
+    columns, the "hundreds of live versions" regime the epoched plan
+    lifecycle has to survive under continuous churn.  ``smoke=True`` is the
+    CI miniature (16 x 3) that keeps the same gates at a fraction of the
+    build cost.
+    """
+    if smoke:
+        return ScenarioConfig(
+            n_schemas=16, versions_per_schema=3, attrs_per_version=6,
+            n_entities=4, cdm_attrs=10, seed=7,
+        )
+    return ScenarioConfig(
+        n_schemas=80, versions_per_schema=6, attrs_per_version=8,
+        n_entities=20, cdm_attrs=30, seed=7,
+    )
+
+
+def churn_schedule(
+    registry: Registry,
+    *,
+    steps: int,
+    first_chunk: int = 1,
+    every: int = 1,
+    seed: int = 0,
+    tag: str = "churn",
+) -> Dict[int, object]:
+    """A deterministic ``{chunk_index: SchemaEvolved}`` churn schedule.
+
+    Each step cuts a new version for one extraction schema (round-robin,
+    attribute keep/add choices drawn from ``seed``).  The events are built
+    eagerly against a *simulated* view of each schema's live attribute
+    names -- the registry itself is not mutated here -- so a schedule can
+    target several arms of an A/B soak that each apply it to their own
+    coordinator.  Repeated evolutions of the same schema stay valid because
+    the simulation tracks the names every earlier step kept or added.
+    """
+    from ..etl.control import SchemaEvolved  # local: core must not import etl at load
+
+    rng = np.random.default_rng(seed)
+    sids = sorted(registry.domain.schema_ids())
+    # Live attribute names per schema, as of the latest version -- the
+    # simulated state each synthesized evolution advances.
+    names: Dict[int, List[str]] = {
+        o: [a.name for a in registry.domain.get(o, registry.domain.latest_version(o)).attributes]
+        for o in sids
+    }
+    sched: Dict[int, object] = {}
+    for i in range(steps):
+        o = sids[i % len(sids)]
+        keep = [n for n in names[o] if rng.random() > 0.25]
+        add = [f"s{o}.{tag}{i}"]
+        if not keep:  # never cut an empty version
+            keep = names[o][:1]
+        names[o] = keep + add
+        sched[first_chunk + i * every] = SchemaEvolved(
+            tree="domain", schema_id=o, keep=tuple(keep), add=tuple(add)
+        )
+    return sched

@@ -4,11 +4,18 @@ from .control import (  # noqa: F401
     ControlReplayError,
     Freeze,
     MatrixEdit,
+    PlanPublished,
     SchemaAdded,
     SchemaEvolved,
     Thaw,
     VersionDeleted,
     replay_control_log,
+)
+from .plan import (  # noqa: F401
+    ColdColumn,
+    PlanEpoch,
+    PlanManager,
+    TieringPolicy,
 )
 from .engines import (  # noqa: F401
     BlocksEngine,

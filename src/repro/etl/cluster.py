@@ -38,9 +38,13 @@ Documented keys: ``instances`` (count), ``engine`` (name), ``state``
 (coordinator state ``i``), ``states`` (distinct per-instance plan states --
 a singleton when all instances agree), ``control_log`` (applied control
 events), ``dispatches`` / ``events`` / ``mapped`` / ``dead_letter``
-(summed over instances), ``per_instance`` (the raw ``engine.info()``
-dicts, instance order).  This is the supported observability surface for
-launchers (``serve --etl --instances N``) and benchmarks.
+(summed over instances), ``plan_epoch`` (max per-instance plan-manager
+epoch), ``rebuilds`` (plan builds summed over instances),
+``bytes_resident`` (device-resident plan bytes summed over instances --
+the cluster's total table footprint under the residency policy),
+``per_instance`` (the raw ``engine.info()`` dicts, instance order).  This
+is the supported observability surface for launchers (``serve --etl
+--instances N``) and benchmarks.
 """
 
 from __future__ import annotations
@@ -278,6 +282,9 @@ class Cluster:
             "events": sum(int(app.stats["events"]) for app in self.apps),
             "mapped": sum(int(app.stats["mapped"]) for app in self.apps),
             "dead_letter": sum(len(app.dead_letter) for app in self.apps),
+            "plan_epoch": max(i.get("plan_epoch", 0) for i in per),
+            "rebuilds": sum(i.get("rebuilds", 0) for i in per),
+            "bytes_resident": sum(i.get("bytes_resident", 0) for i in per),
             "per_instance": per,
         }
 

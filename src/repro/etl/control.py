@@ -29,6 +29,13 @@ Event -> paper mapping:
       distributed system and the matrix, can be disabled".  Data keeps
       flowing; schema changes arriving inside the window are rejected (or,
       in-band, deferred and re-admitted by the ``Thaw``).
+  :class:`PlanPublished`   a :class:`~repro.etl.plan.PlanManager` published
+      a freshly (re)built device plan epoch.  An observability record, not
+      a mutation: it bumps neither the state ``i`` nor the trees, evicts
+      nothing, and is legal inside a Freeze window (plans may rebuild while
+      schema changes are disabled -- data keeps flowing on the new table).
+      Logged so a replayed log reconstructs the full plan-lifecycle
+      timeline alongside the state transitions.
 
 Every schema event knows its Algorithm-5 trigger tuple
 (``(kind, schema_id, version)``): :meth:`ControlEvent.mutate` performs the
@@ -61,6 +68,7 @@ __all__ = [
     "MatrixEdit",
     "Freeze",
     "Thaw",
+    "PlanPublished",
     "ControlReplayError",
     "replay_control_log",
 ]
@@ -183,6 +191,38 @@ class Thaw(ControlEvent):
     in their arrival order."""
 
     op: ClassVar[str] = "thaw"
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanPublished(ControlEvent):
+    """A plan epoch went live: the :class:`~repro.etl.plan.PlanManager`
+    (the ONLY component that may construct or publish fused plans -- the
+    ``plan-publish-single-site`` analyzer rule enforces it) finished a
+    build and is serving it.
+
+    Pure observability: no state bump, no eviction, legal during a Freeze.
+    In-flight chunks pinned to the previous epoch keep draining on the old
+    table (the ``DenseChunk.plan`` pin); the record marks where in the
+    control timeline the cutover happened.
+
+    ``epoch`` is the manager's monotone build counter (NOT the registry
+    state ``i`` -- several epochs can serve one state when the residency
+    policy repartitions); ``state`` is the state the plan was built for;
+    ``incremental`` tells a splice (:func:`repro.core.dmm_jax.splice_fused`)
+    from a full rebuild, with ``touched_columns`` columns re-lowered;
+    ``bytes_resident`` / ``n_blocks`` describe the published table and
+    ``rebuild_s`` what the build cost.
+    """
+
+    op: ClassVar[str] = "plan"
+    epoch: int = 0
+    state: int = 0
+    kind: str = "fused"
+    incremental: bool = False
+    touched_columns: int = 0
+    n_blocks: int = 0
+    bytes_resident: int = 0
+    rebuild_s: float = 0.0
 
 
 def replay_control_log(

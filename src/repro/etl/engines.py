@@ -5,7 +5,9 @@ DPM and maps *triaged* event chunks (``(schema, version) -> [CDCEvent]``
 groups, produced by :meth:`repro.etl.metl.METLApp.triage`) to canonical rows
 through four explicit stages:
 
-    compile(snapshot, registry)   build the device plan for one state
+    compile(snapshot, registry)   acquire the device plan for one state
+                                  from the engine's PlanManager (the single
+                                  plan construction site, repro.etl.plan)
     densify(groups)               host side: payload tensors + routing
     dispatch(dense)               device side: launch, return an UNBLOCKED
                                   handle (jax async dispatch: the output
@@ -101,12 +103,8 @@ import jax.numpy as jnp
 
 from ..core.dmm_jax import (
     CompiledDMM,
-    FusedDMM,
-    ShardedFusedDMM,
+    apply_compacted,
     bucket_rows,
-    compile_dpm,
-    compile_fused,
-    compile_fused_sharded,
     global_uid_tables,
     uid_lookup_table,
 )
@@ -120,6 +118,7 @@ from ..kernels.ops import (
     dmm_apply_sharded,
 )
 from .events import CDCEvent, ColumnarChunk, columnarize
+from .plan import ColdColumn, PlanEpoch, PlanManager
 
 __all__ = [
     "CanonicalRow",
@@ -129,6 +128,7 @@ __all__ = [
     "densify_chunk_dicts",
     "DenseChunk",
     "ColumnarDense",
+    "ColdDense",
     "DispatchHandle",
     "MappingEngine",
     "FusedEngine",
@@ -280,6 +280,21 @@ def _count_unknown_uids(
 
 
 @dataclasses.dataclass
+class ColdDense:
+    """One tier-miss column of a chunk, densified at the column's true
+    width against the epoch-pinned :class:`~repro.etl.plan.ColdColumn`
+    host lease.  The residency policy compacted the column OUT of the
+    device table, so emit serves it through the per-block
+    :func:`repro.core.dmm_jax.apply_compacted` fallback -- the documented
+    slow path a miss pays."""
+
+    col: ColdColumn  # epoch-pinned (carries the column's compacted blocks)
+    keys: np.ndarray  # (n,) i64 event keys
+    vals: np.ndarray  # (n, n_in) f32
+    mask: np.ndarray  # (n, n_in) i8
+
+
+@dataclasses.dataclass
 class DenseChunk:
     """One densified chunk: payload tensors plus (row, block) routing.
 
@@ -289,7 +304,10 @@ class DenseChunk:
     ``i``.  This pin is what keeps the pipeline's double-buffered async
     consume bit-exact across a mid-stream schema evolution: a control event
     may recompile the engine while chunk N is on device, but chunk N emits
-    against its own epoch's plan.
+    against its own epoch's plan.  With residency tiering active, ``cold``
+    carries the chunk's tier-miss columns (also epoch-pinned, through their
+    :class:`ColdDense` leases); their rows are emitted host-side AFTER the
+    resident rows.
     """
 
     plan: Any
@@ -302,6 +320,7 @@ class DenseChunk:
     shard_sel: Optional[List[np.ndarray]] = None
     rows_sh: Optional[np.ndarray] = None  # (n_shards, S_loc) i32
     blks_sh: Optional[np.ndarray] = None  # (n_shards, S_loc) i32
+    cold: Optional[List[ColdDense]] = None  # tier-miss columns (if any)
 
     @property
     def epoch(self) -> Optional[int]:
@@ -339,6 +358,7 @@ class ColumnarDense:
     out_keys: np.ndarray
     shard_sel: Optional[List[np.ndarray]] = None
     n_shards: int = 1
+    cold: Optional[List[ColdDense]] = None  # tier-miss columns (if any)
 
     @property
     def epoch(self) -> Optional[int]:
@@ -377,7 +397,10 @@ class _ChunkLayout:
 
 
 def _chunk_layout(
-    plan: Any, tri: TriagedChunk, stats: Optional[collections.Counter] = None
+    plan: Any,
+    tri: TriagedChunk,
+    stats: Optional[collections.Counter] = None,
+    uid_col: Optional[np.ndarray] = None,
 ) -> Optional[_ChunkLayout]:
     """Build the dense-row selection and (row, block) routing for a chunk.
 
@@ -387,13 +410,20 @@ def _chunk_layout(
     segmented aranges in legacy emission order (per column, per block, per
     event).  Also accounts ``stats["unknown_uid"]`` when ``stats`` is given
     (over ALL triaged events, mappable or not -- see
-    :func:`_count_unknown_uids`).  Returns None for an unmappable chunk
-    (zero dispatches) -- exactly the legacy behaviour: columns with no
-    mapping paths contribute no output rows.
+    :func:`_count_unknown_uids`); with residency tiering the resident plan's
+    ``uid_col`` covers only the hot columns, so engines pass the FULL
+    column set's table via ``uid_col``.  Returns None for an unmappable
+    chunk (zero dispatches) -- exactly the legacy behaviour: columns with
+    no mapping paths contribute no output rows.
     """
     chunk = tri.chunk
     if stats is not None:
-        _count_unknown_uids(plan.uid_col, chunk, tri.by_column, stats)
+        _count_unknown_uids(
+            plan.uid_col if uid_col is None else uid_col,
+            chunk,
+            tri.by_column,
+            stats,
+        )
     cols = [
         (col, idx)
         for (o, v), idx in tri.by_column.items()
@@ -580,6 +610,94 @@ def densify_chunk_dicts(plan: Any, groups: Groups) -> Optional[DenseChunk]:  # m
     )
 
 
+def _densify_cold(
+    lease: Optional[PlanEpoch],
+    tri: TriagedChunk,
+    stats: collections.Counter,
+) -> Optional[List[ColdDense]]:
+    """Densify the chunk's tier-miss columns (those the residency policy
+    compacted out of the device table) at their true width against the
+    lease's host-side :class:`~repro.etl.plan.ColdColumn`s.  Same columnar
+    scatter as the hot path, accounted under ``stats["tier_misses"]``
+    (per missed event).  Returns None when the chunk touches no cold
+    column (the universal case without tiering)."""
+    if lease is None or not lease.cold:
+        return None
+    chunk = tri.chunk
+    out: List[ColdDense] = []
+    for ov, idx in tri.by_column.items():
+        col = lease.cold.get(ov)
+        if col is None:
+            continue
+        vals = np.zeros((idx.size, col.n_in), np.float32)
+        mask = np.zeros((idx.size, col.n_in), np.int8)
+        ev_rows, item_idx = _event_items(chunk, idx)
+        if item_idx.size:
+            slots = _uid_slots(col.lut, chunk.uids[item_idx])
+            keep = slots >= 0
+            if keep.any():
+                vals[ev_rows[keep], slots[keep]] = chunk.vals[item_idx[keep]]
+                mask[ev_rows[keep], slots[keep]] = 1
+        stats["tier_misses"] += int(idx.size)
+        out.append(
+            ColdDense(col=col, keys=chunk.keys[idx], vals=vals, mask=mask)
+        )
+    return out or None
+
+
+def _cold_only_chunk(
+    plan: Any, cold: List[ColdDense]
+) -> DenseChunk:
+    """A chunk whose every mappable column is cold: empty resident routing
+    (dispatch skips the device launch entirely), rows come from the
+    fallback alone."""
+    return DenseChunk(
+        plan=plan,
+        vals=np.zeros((0, 0), np.float32),
+        mask=np.zeros((0, 0), np.int8),
+        row_ids=np.empty(0, np.int32),
+        blk_ids=np.empty(0, np.int32),
+        out_keys=np.empty(0, np.int64),
+        cold=cold,
+    )
+
+
+def _emit_cold(
+    cold: Optional[List[ColdDense]], stats: collections.Counter
+) -> List[CanonicalRow]:
+    """Serve a chunk's tier-miss columns through the per-block
+    :func:`repro.core.dmm_jax.apply_compacted` fallback, appended AFTER the
+    resident rows in per-column, per-block, per-event order (the legacy
+    block-engine order; consumers needing cross-tier ordering sort by event
+    key)."""
+    rows: List[CanonicalRow] = []
+    if not cold:
+        return rows
+    for cd in cold:
+        stats["transfers"] += 2  # vals+mask cross per cold column
+        for block in cd.col.blocks:
+            ov_, om_ = apply_compacted(block, cd.vals, cd.mask)
+            # the tier-miss fallback is the documented synchronous slow
+            # path: read back eagerly, block by block
+            ov_ = np.asarray(ov_)
+            om_ = np.asarray(om_)
+            r, w = block.key[2], block.key[3]
+            for b in range(cd.keys.size):
+                if om_[b].any():  # only non-empty outgoing messages
+                    rows.append(
+                        (
+                            (r, w),
+                            ov_[b, : block.n_out],
+                            om_[b, : block.n_out],
+                            int(cd.keys[b]),
+                        )
+                    )
+                    stats["mapped"] += 1
+                else:
+                    stats["empty"] += 1
+    return rows
+
+
 def _emit_rows(plan, ov, om, blk_ids, out_keys, stats) -> List[CanonicalRow]:
     """Row emission shared by the fused and sharded engines: one
     ``any``/``nonzero`` over the gathered output mask, then slice each
@@ -602,20 +720,36 @@ def _emit_rows(plan, ov, om, blk_ids, out_keys, stats) -> List[CanonicalRow]:
 class MappingEngine:
     """Protocol base for pluggable mapping engines.
 
-    Subclasses implement ``_compile_plan`` plus the three chunk stages
-    (``densify`` / ``dispatch`` / ``emit``) and ``info``.  ``stats`` is the
-    shared counter the owning :class:`~repro.etl.metl.METLApp` injects, so
+    Subclasses declare their ``plan_kind`` and implement the three chunk
+    stages (``densify`` / ``dispatch`` / ``emit``) plus ``info``; the plan
+    itself is never built here -- ``compile`` ACQUIRES it from the engine's
+    :class:`~repro.etl.plan.PlanManager` (the single construction site; the
+    ``plan-publish-single-site`` analyzer rule holds the line), which owns
+    epochs, incremental recompaction, residency tiering and the optional
+    background recompactor.  An engine without an explicitly bound manager
+    gets a private default on first compile.  ``stats`` is the shared
+    counter the owning :class:`~repro.etl.metl.METLApp` injects, so
     engine-side accounting (``dispatches`` / ``mapped`` / ``empty``) lands
     in the app's ``stats``.
     """
 
     name: str = "base"
+    plan_kind: str = "fused"  # the PlanManager kind this engine consumes
 
-    def __init__(self, *, impl: str = "ref", stats: Optional[collections.Counter] = None) -> None:
+    def __init__(
+        self,
+        *,
+        impl: str = "ref",
+        stats: Optional[collections.Counter] = None,
+        manager: Optional[PlanManager] = None,
+    ) -> None:
         self.impl = impl
         self.stats = stats if stats is not None else collections.Counter()
         self.compiled: Optional[CompiledDMM] = None
         self.plan: Any = None
+        self.manager = manager
+        self.lease: Optional[PlanEpoch] = None
+        self._stats_uid_col: Optional[np.ndarray] = None
 
     # -- plan lifecycle -----------------------------------------------------
     @property
@@ -623,18 +757,52 @@ class MappingEngine:
         return self.plan is not None
 
     def compile(self, snapshot: SystemState, registry: Registry) -> Any:
-        """Build (and retain) the device plan for one state snapshot."""
-        self.compiled = compile_dpm(snapshot.dpm, registry)
-        self.plan = self._compile_plan(self.compiled, registry)
+        """Acquire (and retain) the device plan for one state snapshot from
+        the plan manager -- cached when current, spliced incrementally when
+        the DPM diff allows, fully rebuilt otherwise."""
+        if self.manager is None:
+            self.manager = PlanManager(
+                kind=self.plan_kind, mesh=getattr(self, "mesh", None)
+            )
+        if self.manager.kind != self.plan_kind:
+            raise ValueError(
+                f"engine {self.name!r} consumes plan kind "
+                f"{self.plan_kind!r}, manager builds {self.manager.kind!r}"
+            )
+        lease = self.manager.acquire(snapshot, registry)
+        self.lease = lease
+        self.compiled = lease.compiled
+        self.plan = lease.plan
+        self._on_plan(lease, registry)
         return self.plan
 
     def evict(self) -> None:
-        """Drop every state-derived cache (the Caffeine analogue)."""
+        """Drop every state-derived cache (the Caffeine analogue).  The
+        manager keeps ITS lease -- it is state-keyed, so a re-acquire at an
+        unchanged state is a cache hit, and a state bump rebuilds."""
         self.compiled = None
         self.plan = None
+        self.lease = None
+        self._stats_uid_col = None
 
-    def _compile_plan(self, compiled: CompiledDMM, registry: Registry) -> Any:
-        raise NotImplementedError
+    def _on_plan(self, lease: PlanEpoch, registry: Registry) -> None:
+        """Post-acquire hook: refresh engine-side state derived from a new
+        lease (subclasses extend)."""
+        # the resident plan's uid tables cover hot columns only; unknown-uid
+        # accounting must keep seeing the FULL column set when tiering has
+        # compacted some columns out
+        self._stats_uid_col = (
+            global_uid_tables(lease.compiled, registry)[1]
+            if lease.cold
+            else None
+        )
+
+    def _manager_info(self) -> Dict[str, Any]:
+        """The manager-derived keys every engine's ``info()`` carries."""
+        if self.manager is None:
+            return {"plan_epoch": 0, "rebuilds": 0}
+        m = self.manager.info()
+        return {"plan_epoch": m["plan_epoch"], "rebuilds": m["rebuilds"]}
 
     # -- chunk stages --------------------------------------------------------
     def densify(self, groups: Groups) -> Any:
@@ -671,6 +839,15 @@ class MappingEngine:
           ``n_shards``    mesh shards the plan is partitioned over (1 when
                           replicated)
           ``dispatches``  cumulative device dispatches through this engine
+          ``transfers``   cumulative host->device transfers (fused/sharded
+                          engines; the per-block engine reports none)
+          ``device_densify``  whether densification runs on device
+                          (fused/sharded engines)
+          ``plan_epoch``  the plan manager's monotone build counter (0
+                          before the first acquire; several epochs can
+                          serve one state ``i``)
+          ``rebuilds``    cumulative plan builds through the manager
+                          (incremental splices + full rebuilds)
 
         and, once a plan is compiled (absent while evicted):
 
@@ -679,6 +856,10 @@ class MappingEngine:
           ``blocks_per_shard``      blocks resident per shard
           ``table_bytes``           device-resident block-table bytes, total
           ``table_bytes_per_shard`` per-shard slice bytes (~ total/N sharded)
+          ``bytes_resident``        device-resident block-table bytes the
+                                    lease actually holds (tracks the
+                                    residency policy: cold columns stay
+                                    compacted-out and don't count)
           ``width``                 padded block-table row width (fused/
                                     sharded only)
 
@@ -711,6 +892,7 @@ def make_engine(
     mesh: Any = None,
     device_densify: bool = False,
     stats: Optional[collections.Counter] = None,
+    manager: Optional[PlanManager] = None,
 ) -> MappingEngine:
     """Resolve an engine name (or pass through an instance) to a ready
     :class:`MappingEngine`.
@@ -727,6 +909,11 @@ def make_engine(
     only the fused and sharded engines realise it, and ``impl="onehot"``
     (which routes to the per-block engine) cannot -- both misconfigurations
     raise instead of silently benching a different path.
+
+    ``manager`` binds an explicit :class:`~repro.etl.plan.PlanManager`
+    (tiering / background recompaction / coordinator-published epochs);
+    its ``kind`` must match the engine the routing rules resolve to.
+    Without one the engine builds a private default on first compile.
     """
     if isinstance(engine, MappingEngine):
         # an instance carries its own impl/mesh; silently overriding (or
@@ -748,6 +935,13 @@ def make_engine(
             )
         if stats is not None:
             engine.stats = stats
+        if manager is not None:
+            if engine.manager is not None and engine.manager is not manager:
+                raise ValueError(
+                    "manager= conflicts with the engine instance's manager; "
+                    "construct the engine with its manager instead"
+                )
+            engine.manager = manager
         return engine
     if engine not in ENGINES:
         raise ValueError(
@@ -759,22 +953,24 @@ def make_engine(
                 "device_densify=True has no onehot realisation (impl='onehot' "
                 "routes to the per-block engine)"
             )
-        return ENGINES["blocks"](impl=impl, stats=stats)
+        return ENGINES["blocks"](impl=impl, stats=stats, manager=manager)
     if engine == "sharded":
         n_shards = int(mesh.shape["data"]) if mesh is not None else 1
         if n_shards <= 1:
             return ENGINES["fused"](
-                impl=impl, device_densify=device_densify, stats=stats
+                impl=impl, device_densify=device_densify, stats=stats,
+                manager=manager,
             )
         return ENGINES["sharded"](
-            mesh=mesh, impl=impl, device_densify=device_densify, stats=stats
+            mesh=mesh, impl=impl, device_densify=device_densify, stats=stats,
+            manager=manager,
         )
     if device_densify and engine != "fused":
         raise ValueError(
             f"engine={engine!r} has no device-densify path (fused/sharded only)"
         )
     kwargs = {"device_densify": device_densify} if engine == "fused" else {}
-    return ENGINES[engine](impl=impl, stats=stats, **kwargs)
+    return ENGINES[engine](impl=impl, stats=stats, manager=manager, **kwargs)
 
 
 # -- the fused engine ---------------------------------------------------------
@@ -802,23 +998,24 @@ class FusedEngine(MappingEngine):
         device_densify: bool = False,
         min_device_events: int = 32,
         stats: Optional[collections.Counter] = None,
+        manager: Optional[PlanManager] = None,
     ) -> None:
-        super().__init__(impl=impl, stats=stats)
+        super().__init__(impl=impl, stats=stats, manager=manager)
         self.device_densify = device_densify
         self.min_device_events = min_device_events
-
-    def _compile_plan(self, compiled: CompiledDMM, registry: Registry) -> FusedDMM:
-        return compile_fused(compiled, registry)
 
     def densify(self, groups: Groups) -> Any:
         tri = as_triaged(groups)
         if tri is None:
             return None
-        layout = _chunk_layout(self.plan, tri, self.stats)
+        layout = _chunk_layout(self.plan, tri, self.stats, self._stats_uid_col)
+        cold = _densify_cold(self.lease, tri, self.stats)
         if layout is None:
-            return None
+            return _cold_only_chunk(self.plan, cold) if cold else None
         if not self.device_densify or layout.sel.size < self.min_device_events:
-            return _densify_host(self.plan, layout)
+            dense = _densify_host(self.plan, layout)
+            dense.cold = cold
+            return dense
         s = layout.row_ids.size
         s_pad = bucket_rows(s)
         rows = np.zeros(s_pad, np.int32)
@@ -836,9 +1033,12 @@ class FusedEngine(MappingEngine):
             row_ids=layout.row_ids,
             blk_ids=layout.blk_ids,
             out_keys=layout.out_keys,
+            cold=cold,
         )
 
     def dispatch(self, dense) -> DispatchHandle:
+        if dense.row_ids.size == 0:  # cold-only chunk: nothing resident
+            return DispatchHandle(outputs=None, dense=dense)
         fused = dense.plan
         impl = {"gather": "fused"}.get(self.impl, self.impl)
         if isinstance(dense, ColumnarDense):
@@ -870,10 +1070,16 @@ class FusedEngine(MappingEngine):
 
     def emit(self, handle: DispatchHandle) -> List[CanonicalRow]:
         dense = handle.dense
-        s = dense.row_ids.size
-        ov = np.asarray(handle.outputs[0])[:s]  # metl: allow[host-sync-in-hot-path] the engine sync point
-        om = np.asarray(handle.outputs[1])[:s]  # metl: allow[host-sync-in-hot-path] the engine sync point
-        return _emit_rows(dense.plan, ov, om, dense.blk_ids, dense.out_keys, self.stats)
+        rows: List[CanonicalRow] = []
+        if handle.outputs is not None:
+            s = dense.row_ids.size
+            ov = np.asarray(handle.outputs[0])[:s]  # metl: allow[host-sync-in-hot-path] the engine sync point
+            om = np.asarray(handle.outputs[1])[:s]  # metl: allow[host-sync-in-hot-path] the engine sync point
+            rows = _emit_rows(
+                dense.plan, ov, om, dense.blk_ids, dense.out_keys, self.stats
+            )
+        rows.extend(_emit_cold(dense.cold, self.stats))
+        return rows
 
     def info(self) -> Dict[str, Any]:
         d: Dict[str, Any] = {
@@ -883,6 +1089,7 @@ class FusedEngine(MappingEngine):
             "device_densify": self.device_densify,
             "dispatches": int(self.stats["dispatches"]),
             "transfers": int(self.stats["transfers"]),
+            **self._manager_info(),
         }
         if self.plan is not None:
             p = self.plan
@@ -894,6 +1101,11 @@ class FusedEngine(MappingEngine):
                 width=p.width,
                 table_bytes=table_bytes,
                 table_bytes_per_shard=table_bytes,
+                bytes_resident=(
+                    self.lease.bytes_resident
+                    if self.lease is not None
+                    else table_bytes
+                ),
             )
         return d
 
@@ -909,22 +1121,20 @@ class ShardedEngine(MappingEngine):
     all-gather of the emitted dense rows in emit and the shared emission
     pass in global (replicated-engine) order -- bit-exact with ``fused``."""
 
+    plan_kind = "sharded"
+
     def __init__(
         self, *, mesh: Any, impl: str = "ref", device_densify: bool = False,
         min_device_events: int = 32, stats: Optional[collections.Counter] = None,
+        manager: Optional[PlanManager] = None,
     ) -> None:
-        super().__init__(impl=impl, stats=stats)
+        super().__init__(impl=impl, stats=stats, manager=manager)
         if mesh is None:
             raise ValueError("engine='sharded' needs a mesh (make_etl_mesh)")
         self.mesh = mesh
         self.n_shards = int(mesh.shape["data"])
         self.device_densify = device_densify
         self.min_device_events = min_device_events
-
-    def _compile_plan(self, compiled: CompiledDMM, registry: Registry) -> ShardedFusedDMM:
-        # each device gets only its slice of the block table; the replicated
-        # FusedDMM is never materialised on this path
-        return compile_fused_sharded(compiled, registry, mesh=self.mesh)
 
     def _shard_split(self, row_ids, blk_ids):
         """Split the global (row, block) routing by owning shard; the
@@ -946,13 +1156,15 @@ class ShardedEngine(MappingEngine):
         tri = as_triaged(groups)
         if tri is None:
             return None
-        layout = _chunk_layout(self.plan, tri, self.stats)
+        layout = _chunk_layout(self.plan, tri, self.stats, self._stats_uid_col)
+        cold = _densify_cold(self.lease, tri, self.stats)
         if layout is None:
-            return None
+            return _cold_only_chunk(self.plan, cold) if cold else None
         sel, rows_sh, blks_sh = self._shard_split(layout.row_ids, layout.blk_ids)
         if not self.device_densify or layout.sel.size < self.min_device_events:
             dense = _densify_host(self.plan, layout)
             dense.shard_sel, dense.rows_sh, dense.blks_sh = sel, rows_sh, blks_sh
+            dense.cold = cold
             return dense
         # per-shard routing rides flattened in the packed buffer; the kernel
         # side reshapes to (n_shards, S_loc) and shard_map fans it out
@@ -969,9 +1181,12 @@ class ShardedEngine(MappingEngine):
             out_keys=layout.out_keys,
             shard_sel=sel,
             n_shards=self.n_shards,
+            cold=cold,
         )
 
     def dispatch(self, dense) -> DispatchHandle:
+        if dense.row_ids.size == 0:  # cold-only chunk: nothing resident
+            return DispatchHandle(outputs=None, dense=dense)
         sh = dense.plan
         impl = {"gather": "fused"}.get(self.impl, self.impl)
         if isinstance(dense, ColumnarDense):
@@ -1002,17 +1217,23 @@ class ShardedEngine(MappingEngine):
 
     def emit(self, handle: DispatchHandle) -> List[CanonicalRow]:
         dense = handle.dense
-        sh = dense.plan
-        # all-gather: pull every shard's emitted dense rows to the host and
-        # scatter them back to the global output order
-        ov = np.asarray(handle.outputs[0])  # metl: allow[host-sync-in-hot-path] the engine sync point (all-gather)
-        om = np.asarray(handle.outputs[1])  # metl: allow[host-sync-in-hot-path] the engine sync point (all-gather)
-        gv = np.zeros((dense.row_ids.size, sh.width), ov.dtype)
-        gm = np.zeros((dense.row_ids.size, sh.width), om.dtype)
-        for s, idx in enumerate(dense.shard_sel):
-            gv[idx] = ov[s, : len(idx)]
-            gm[idx] = om[s, : len(idx)]
-        return _emit_rows(sh, gv, gm, dense.blk_ids, dense.out_keys, self.stats)
+        rows: List[CanonicalRow] = []
+        if handle.outputs is not None:
+            sh = dense.plan
+            # all-gather: pull every shard's emitted dense rows to the host
+            # and scatter them back to the global output order
+            ov = np.asarray(handle.outputs[0])  # metl: allow[host-sync-in-hot-path] the engine sync point (all-gather)
+            om = np.asarray(handle.outputs[1])  # metl: allow[host-sync-in-hot-path] the engine sync point (all-gather)
+            gv = np.zeros((dense.row_ids.size, sh.width), ov.dtype)
+            gm = np.zeros((dense.row_ids.size, sh.width), om.dtype)
+            for s, idx in enumerate(dense.shard_sel):
+                gv[idx] = ov[s, : len(idx)]
+                gm[idx] = om[s, : len(idx)]
+            rows = _emit_rows(
+                sh, gv, gm, dense.blk_ids, dense.out_keys, self.stats
+            )
+        rows.extend(_emit_cold(dense.cold, self.stats))
+        return rows
 
     def info(self) -> Dict[str, Any]:
         d: Dict[str, Any] = {
@@ -1022,16 +1243,23 @@ class ShardedEngine(MappingEngine):
             "device_densify": self.device_densify,
             "dispatches": int(self.stats["dispatches"]),
             "transfers": int(self.stats["transfers"]),
+            **self._manager_info(),
         }
         if self.plan is not None:
             p = self.plan
+            table_bytes = int(p.src3d.nbytes)
             d.update(
                 state=p.state,
                 n_blocks=p.n_blocks,
                 blocks_per_shard=p.blocks_per_shard,
                 width=p.width,
-                table_bytes=int(p.src3d.nbytes),
+                table_bytes=table_bytes,
                 table_bytes_per_shard=p.table_bytes_per_shard,
+                bytes_resident=(
+                    self.lease.bytes_resident
+                    if self.lease is not None
+                    else table_bytes
+                ),
             )
         return d
 
@@ -1058,19 +1286,25 @@ class BlocksEngine(MappingEngine):
     the column's true width instead of one fused payload tensor.
     """
 
-    def __init__(self, *, impl: str = "ref", stats: Optional[collections.Counter] = None) -> None:
-        super().__init__(impl=impl, stats=stats)
+    plan_kind = "blocks"
+
+    def __init__(
+        self, *, impl: str = "ref",
+        stats: Optional[collections.Counter] = None,
+        manager: Optional[PlanManager] = None,
+    ) -> None:
+        super().__init__(impl=impl, stats=stats, manager=manager)
         self._registry: Optional[Registry] = None
         self._luts: Dict[Tuple[int, int], np.ndarray] = {}
         self._uid_col_global: Optional[np.ndarray] = None
 
-    def _compile_plan(self, compiled: CompiledDMM, registry: Registry) -> CompiledDMM:
+    def _on_plan(self, lease: PlanEpoch, registry: Registry) -> None:
+        super()._on_plan(lease, registry)
         self._registry = registry
         self._luts = {}  # uid -> slot tables are per registry state
         # plan-global uid -> owning-column table, so stats["unknown_uid"] is
         # counted identically to the fused engines (which carry it on the plan)
-        self._uid_col_global = global_uid_tables(compiled, registry)[1]
-        return compiled  # the per-block plan IS the compiled DPM
+        self._uid_col_global = global_uid_tables(lease.compiled, registry)[1]
 
     def _column_lut(self, o: int, v: int) -> np.ndarray:
         lut = self._luts.get((o, v))
@@ -1133,14 +1367,21 @@ class BlocksEngine(MappingEngine):
             "impl": self.impl,
             "n_shards": 1,
             "dispatches": int(self.stats["dispatches"]),
+            **self._manager_info(),
         }
         if self.plan is not None:
             blocks = [b for col in self.plan.by_column.values() for b in col]
+            table_bytes = int(sum(b.src.nbytes for b in blocks))
             d.update(
                 state=self.plan.state,
                 n_blocks=self.plan.n_blocks,
                 blocks_per_shard=self.plan.n_blocks,
-                table_bytes=int(sum(b.src.nbytes for b in blocks)),
-                table_bytes_per_shard=int(sum(b.src.nbytes for b in blocks)),
+                table_bytes=table_bytes,
+                table_bytes_per_shard=table_bytes,
+                bytes_resident=(
+                    self.lease.bytes_resident
+                    if self.lease is not None
+                    else table_bytes
+                ),
             )
         return d

@@ -74,6 +74,7 @@ class METLApp:
         engine: Union[str, MappingEngine] = "fused",
         mesh: Any = None,
         device_densify: bool = False,
+        plan_manager: Any = None,
     ) -> None:
         self.coordinator = coordinator
         self.strict_state = strict_state
@@ -83,10 +84,13 @@ class METLApp:
         # engine resolution: strings go through the registry factory (which
         # also applies the legacy impl="onehot" -> blocks and 1-shard
         # sharded -> fused routing); instances are adopted as-is and share
-        # the app's stats counter
+        # the app's stats counter.  plan_manager binds an explicit
+        # repro.etl.plan.PlanManager (incremental recompaction is on by
+        # default either way; an explicit manager adds residency tiering,
+        # background recompaction and PlanPublished control events)
         self.engine = make_engine(
             engine, impl=impl, mesh=mesh, device_densify=device_densify,
-            stats=self.stats,
+            stats=self.stats, manager=plan_manager,
         )
         self._seen: collections.OrderedDict = collections.OrderedDict()
         self._dedup_window = dedup_window
@@ -268,12 +272,19 @@ class METLApp:
                     stats["dead_lettered"] += 1
                 continue
             by_column[(schema_ids[e], versions[e])].append(e)
-        return TriagedChunk(
+        tri = TriagedChunk(
             chunk=chunk,
             by_column={
                 ov: np.asarray(idx, dtype=np.int64) for ov, idx in by_column.items()
             },
         )
+        # residency tiering: triage is where every mappable event passes, so
+        # the per-(o, v) hit counters feeding the plan manager's hot/cold
+        # policy are folded in here (no-op without a tiering policy)
+        mgr = self.engine.manager
+        if mgr is not None and mgr.tiering is not None and tri.by_column:
+            mgr.record_hits(tri.by_column)
+        return tri
 
     def consume(
         self, events: Union[Iterable[CDCEvent], ColumnarChunk]

@@ -88,6 +88,20 @@ source the same way.  Control events do not count against
 ``run(max_chunks=)`` budgets and are applied exactly once (a replay
 ``reset_offset`` re-delivers data, never control).
 
+**Plan lifecycle across control boundaries.**  The recompile the boundary
+triggers goes through the engine's :class:`~repro.etl.plan.PlanManager`:
+by default an incremental recompaction (only the evolution's touched
+columns are re-lowered and spliced into the previous epoch's fused table,
+:func:`repro.core.dmm_jax.recompile_columns` / ``splice_fused``), not a
+full rebuild -- and with ``background=True`` the manager prepares the next
+epoch on a worker thread the moment the eviction fan-out fires, so the
+boundary's lazy recompile usually finds the table ready.  The epoch pin
+above is exactly what lets the in-flight chunk drain on the OLD epoch's
+table while the next chunk densifies against the new one; a manager bound
+with ``publish=True`` records each cutover in the control log as a
+:class:`~repro.etl.control.PlanPublished` event (see docs/plan_lifecycle
+for the timeline diagram).
+
 Sinks:
 
   * :class:`TokenizerSink` -- feeds the serve batcher: rows -> token prompt

@@ -909,6 +909,7 @@ def test_all_twelve_rules_registered():
         "single-writer-control",
         "epoch-pin-escape",
         "transfer-accounting",
+        "plan-publish-single-site",
         "bad-waiver",
         "unused-waiver",
     }
@@ -931,3 +932,93 @@ def test_cli_github_output_clean_tree(tmp_path):
     assert proc.returncode == 0
     assert "::error" not in proc.stdout
     assert "repro.analysis: OK" in proc.stdout
+
+# ------------------------------------------------- plan-publish-single-site
+
+
+def test_plan_publish_fires_on_direct_compile(tmp_path):
+    # compile_dpm stays free (benchmarks A/B the host compacted form);
+    # the fused lowering is the single-site contract
+    rep = _run(
+        tmp_path,
+        "benchmarks/bench.py",
+        "from repro.core.dmm_jax import compile_dpm, compile_fused\n"
+        "plan = compile_fused(compile_dpm(dpm, reg), reg)\n",
+    )
+    hits = [f for f in rep.findings if f.rule == "plan-publish-single-site"]
+    assert len(hits) == 1 and "compile_fused" in hits[0].message
+
+
+def test_plan_publish_fires_through_import_alias(tmp_path):
+    # no restricted name survives at the call site: resolution through the
+    # module's import table catches the alias
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/engines.py",
+        "from repro.core.dmm_jax import splice_fused as sf\n"
+        "plan = sf(old, compiled, reg, touched)\n",
+    )
+    assert "plan-publish-single-site" in _rules_hit(rep)
+
+
+def test_plan_publish_fires_on_handmade_publish_event(tmp_path):
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/cluster.py",
+        "from .control import PlanPublished\n"
+        "def announce(coord, n):\n"
+        "    coord.apply(PlanPublished(epoch=n, state=0, kind='fused',\n"
+        "                              n_blocks=0, bytes_resident=0,\n"
+        "                              incremental=False, touched_columns=0,\n"
+        "                              rebuild_s=0.0))\n",
+    )
+    hits = [f for f in rep.findings if f.rule == "plan-publish-single-site"]
+    assert hits and "PlanPublished" in hits[0].message
+
+
+def test_plan_publish_clean_twin_manager_lease(tmp_path):
+    rep = _run(
+        tmp_path,
+        "benchmarks/bench.py",
+        "from repro.core.dmm_jax import compile_dpm\n"
+        "from repro.etl import METLApp, PlanManager, TieringPolicy\n"
+        "mgr = PlanManager(kind='fused', coordinator=coord)\n"
+        "app = METLApp(coord, plan_manager=mgr)\n"
+        "lease = mgr.acquire(snap, reg)\n"
+        "compiled = compile_dpm(dpm, reg)\n"
+        "ok = isinstance(lease.plan, FusedDMM)\n",
+    )
+    assert "plan-publish-single-site" not in _rules_hit(rep)
+
+
+def test_plan_publish_exempt_inside_owners(tmp_path):
+    _write(
+        tmp_path,
+        "src/repro/etl/plan.py",
+        "from repro.core.dmm_jax import compile_fused\n"
+        "def _build(compiled, reg):\n"
+        "    return compile_fused(compiled, reg)\n",
+    )
+    _write(
+        tmp_path,
+        "src/repro/core/dmm_jax.py",
+        "def compile_fused(compiled, reg):\n"
+        "    return FusedDMM(state=0)\n",
+    )
+    rep = analyze([str(tmp_path)], select=["plan-publish-single-site"])
+    assert rep.ok, "\n".join(f.render() for f in rep.findings)
+
+
+def test_plan_publish_mutation_in_engines_copy(tmp_path):
+    """ISSUE mutation check: an engine quietly lowering its own fused plan
+    (the pre-PR-9 shape) in a copy of the real engines.py must fire."""
+    src = (REPO / "src/repro/etl/engines.py").read_text()
+    src += (
+        "\n\ndef sneak_compile(compiled, registry):\n"
+        "    from ..core.dmm_jax import compile_fused\n"
+        "    return compile_fused(compiled, registry)\n"
+    )
+    _write(tmp_path, "src/repro/etl/engines.py", src)
+    rep = analyze([str(tmp_path)], select=["plan-publish-single-site"])
+    assert not rep.ok
+    assert all(f.rule == "plan-publish-single-site" for f in rep.findings)
