@@ -1,0 +1,210 @@
+"""Distributed control plane (PR 10): replication lag and failover cost.
+
+Three arms over the in-process ``local_pipe`` transport (no socket noise,
+so the numbers isolate codec + ledger + replay work):
+
+1. **ship** -- leader-side cost of one replicated apply: typed event ->
+   coordinator apply -> wire encode -> fenced ledger commit -> broadcast.
+2. **replay** -- follower-side cost of draining the same records:
+   transport recv -> decode -> ``replay_control_log`` onto the replica.
+   ship + replay bound the steady-state replication lag; the measured
+   end-to-end lag (apply -> applied-on-replica) rides the ``derived``
+   column of the ``replication_lag`` row.
+3. **failover** -- leader dies mid-history: elect the longest-log
+   follower, promote it (pending suffix replayed, new term fenced), and
+   re-seed a cold joiner from the promoted leader's snapshot.  Wall time
+   is the ``derived`` ms; the PERF metric is its rate form.
+
+Gates (GATE_FAILURES): the replica after failover is bit-identical to the
+pre-crash coordinator (registry dict + state), and a leader/follower data
+run emits zero dropped / zero duplicated rows against the oracle count.
+
+PERF_METRICS are higher-is-better rates (scripts/perf_diff.py contract):
+``replication_ship_records_per_s``, ``replication_replay_records_per_s``,
+``replication_e2e_records_per_s``, ``replication_failovers_per_s``.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.state import StateCoordinator
+from repro.core.synthetic import ScenarioConfig, build_scenario, churn_schedule
+from repro.etl import EventSource
+from repro.etl.replication import (
+    DataPlane,
+    END_OF_STREAM,
+    FollowerNode,
+    LeaderNode,
+    elect_leader,
+    promote,
+)
+from repro.etl.transport import local_pipe, row_to_wire
+
+GATE_FAILURES: list = []
+PERF_METRICS: dict = {}
+
+
+def _scenario(seed: int, n_schemas: int):
+    return build_scenario(
+        ScenarioConfig(n_schemas=n_schemas, versions_per_schema=2, seed=seed)
+    )
+
+
+def _attach(leader, node_id):
+    import threading
+
+    end_l, end_f = local_pipe()
+    t = threading.Thread(target=leader.attach, args=(end_l,))
+    t.start()
+    fol = FollowerNode(end_f, node_id=node_id)
+    fol.subscribe()
+    t.join()
+    return fol
+
+
+def _churn_events(registry, steps, seed=9):
+    return list(churn_schedule(registry, steps=steps, seed=seed).values())
+
+
+def _ship_and_replay(smoke: bool):
+    steps = 24 if smoke else 120
+    sc = _scenario(seed=61, n_schemas=8)
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    leader = LeaderNode(coord, term=1)
+    fol = _attach(leader, node_id=1)
+    events = _churn_events(coord.registry, steps)
+
+    t0 = time.perf_counter()
+    for ev in events:
+        leader.apply(ev)
+    ship_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    fol.pump()
+    fol.advance_to(END_OF_STREAM)
+    replay_s = time.perf_counter() - t0
+    e2e_s = ship_s + replay_s
+
+    if fol.coordinator.registry.to_dict() != coord.registry.to_dict():
+        GATE_FAILURES.append("replayed replica diverged from the leader")
+    n = len(events)
+    PERF_METRICS["replication_ship_records_per_s"] = n / max(1e-9, ship_s)
+    PERF_METRICS["replication_replay_records_per_s"] = n / max(1e-9, replay_s)
+    PERF_METRICS["replication_e2e_records_per_s"] = n / max(1e-9, e2e_s)
+    lag_ms = 1e3 * e2e_s / n
+    return [
+        ("replication_ship", 1e6 * ship_s / n, f"{n} records"),
+        ("replication_replay", 1e6 * replay_s / n, f"{n} records"),
+        ("replication_lag", 1e6 * e2e_s / n, f"{lag_ms:.3f} ms/record e2e"),
+    ]
+
+
+def _failover(smoke: bool):
+    trials = 3 if smoke else 10
+    total_s = 0.0
+    for k in range(trials):
+        sc = _scenario(seed=71 + k, n_schemas=6)
+        coord = StateCoordinator(sc.registry, sc.dpm)
+        leader = LeaderNode(coord, term=1)
+        f1 = _attach(leader, node_id=1)
+        f2 = _attach(leader, node_id=2)
+        for ev in _churn_events(coord.registry, 8, seed=5 + k):
+            leader.apply(ev)
+        f1.pump()  # f1 holds the full suffix, f2 lags
+        want = coord.registry.to_dict()
+
+        t0 = time.perf_counter()
+        winner = elect_leader([f1, f2])
+        new = promote(winner, term=leader.term + 1)
+        f2.transport.close()
+        rejoined = _attach(new, node_id=2)
+        rejoined.advance_to(END_OF_STREAM)
+        total_s += time.perf_counter() - t0
+
+        if new.coordinator.registry.to_dict() != want:
+            GATE_FAILURES.append(f"failover trial {k}: promoted state diverged")
+        if rejoined.coordinator.registry.to_dict() != want:
+            GATE_FAILURES.append(f"failover trial {k}: rejoined replica diverged")
+    per_s = total_s / trials
+    PERF_METRICS["replication_failovers_per_s"] = 1.0 / max(1e-9, per_s)
+    return [
+        (
+            "replication_failover",
+            1e6 * per_s,
+            f"{per_s * 1e3:.2f} ms elect+promote+reseed ({trials} trials)",
+        )
+    ]
+
+
+def _data_parity(smoke: bool):
+    """Leader + follower split the chunk grid under churn: zero dropped /
+    zero duplicated rows vs the single-plane oracle."""
+    max_chunks, chunk_size = (6, 32) if smoke else (12, 64)
+
+    def world(seed=81):
+        sc = _scenario(seed=seed, n_schemas=5)
+        churn = churn_schedule(sc.registry, steps=2, first_chunk=2, seed=3)
+        return sc, {i: [e] for i, e in churn.items()}
+
+    osc, osched = world()
+    ocoord = StateCoordinator(osc.registry, osc.dpm)
+    oracle = LeaderNode(ocoord, term=1)
+    oracle.set_schedule(osched)
+    orows = {}
+    oracle.run(
+        DataPlane(ocoord, EventSource(osc.registry, seed=4), slot=0,
+                  instances=1, chunk_size=chunk_size, max_chunks=max_chunks),
+        on_chunk=lambda h, rows: orows.__setitem__(h, rows),
+    )
+    oracle.finish(end=max_chunks - 1)
+
+    sc, sched = world()
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    leader = LeaderNode(coord, term=1)
+    leader.set_schedule(sched)
+    fol = _attach(leader, node_id=1)
+    got = {}
+    t0 = time.perf_counter()
+    leader.run(
+        DataPlane(coord, EventSource(sc.registry, seed=4), slot=0, instances=2,
+                  chunk_size=chunk_size, max_chunks=max_chunks),
+        on_chunk=lambda h, rows: got.__setitem__(h, rows),
+    )
+    leader.finish(end=max_chunks - 1)
+    fol.run(
+        DataPlane(fol.coordinator, EventSource(fol.coordinator.registry, seed=4),
+                  slot=1, instances=2, chunk_size=chunk_size,
+                  max_chunks=max_chunks),
+        on_chunk=lambda h, rows: got.__setitem__(h, rows),
+    )
+    fol.finish()
+    dt = time.perf_counter() - t0
+
+    if sorted(got) != sorted(orows):
+        GATE_FAILURES.append(
+            f"chunk set mismatch: {sorted(got)} vs oracle {sorted(orows)}"
+        )
+    else:
+        for h in orows:
+            a = [row_to_wire(r) for r in got[h]]
+            b = [row_to_wire(r) for r in orows[h]]
+            if a != b:
+                GATE_FAILURES.append(f"row mismatch in chunk {h}")
+                break
+    n_rows = sum(len(v) for v in got.values())
+    return [
+        (
+            "replication_data_split",
+            1e6 * dt / max(1, max_chunks),
+            f"{n_rows} rows over {max_chunks} chunks, rows match oracle",
+        )
+    ]
+
+
+def run(smoke: bool = False) -> list:
+    rows = []
+    rows += _ship_and_replay(smoke)
+    rows += _failover(smoke)
+    rows += _data_parity(smoke)
+    return rows

@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
     bench_update       §3.5/§5.4 update cost (~100k elements per version add)
     bench_moe          model-side DMM (MoE dispatch impls A/B)
     bench_train_step   per-family step cost regression tracker
+    bench_replication  §6 control plane: replication lag + failover cost
 
 ``--smoke`` is forwarded to modules whose ``run()`` accepts it (tiny shapes,
 CI-sized).  ``--artifact DIR`` writes one ``BENCH_<unix-ts>.json`` trajectory
@@ -40,6 +41,7 @@ MODULES = [
     "bench_update",
     "bench_moe",
     "bench_train_step",
+    "bench_replication",
 ]
 
 

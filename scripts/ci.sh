@@ -49,7 +49,16 @@
 #    deferred evolution + VersionDeleted), applied at chunk boundaries by
 #    the single-writer coordinator, with the control-log replay
 #    determinism check (the script asserts state + DPM bit-exactness);
-# 6. a tiny-shape run of the mapping + compaction benchmarks so the
+# 5b. the multi-process replication smoke
+#    (scripts/replication_smoke.py): a 1-leader + 2-follower cluster over
+#    real sockets splits the chunk grid under churn and a Freeze/Thaw
+#    window; the leader is killed mid-stream by fault injection (after
+#    emitting a chunk, before checkpointing it), a new leader resumes
+#    from the atomic (control_log offset, source offset) checkpoint under
+#    the next term, and the merged output must match the single-process
+#    oracle bit-for-bit -- zero dropped, zero duplicated rows;
+# 6. a tiny-shape run of the mapping + compaction + replication
+#    benchmarks so the
 #    fused- and sharded-engine perf paths (kernel, shard_map dispatcher,
 #    consume, sync-vs-async pipeline, columnar + device densify) and the
 #    epoched plan lifecycle can't rot silently even when no test exercises
@@ -62,7 +71,11 @@
 #    chunk size, if any densify path (columnar, device, sharded-device,
 #    pipelined-device) diverges bit-wise from its host oracle, or if the
 #    epoch transition drops/duplicates rows (in-band vs out-of-band
-#    oracle, 4-instance cluster vs single instance).  bench_compaction
+#    oracle, 4-instance cluster vs single instance).  bench_replication
+#    gates in-process control-plane parity (replayed replica and
+#    promoted-on-failover replica bit-equal to the leader; leader +
+#    follower data split matching the oracle row-for-row) while writing
+#    replication lag and failover time into the artifact.  bench_compaction
 #    gates the PlanManager soak: incremental recompaction must emit
 #    row-keys identical to the full-rebuild oracle across every churn
 #    cutover, the latest-pinned tiering arm must match up to row order
@@ -118,8 +131,11 @@ python examples/pipeline_stream.py --chunks 4 --prompts 500
 echo "== mid-stream schema evolution (in-band control + log replay) =="
 python examples/schema_evolution.py --steps 4
 
+echo "== replication smoke (leader kill + failover, exactly-once rows) =="
+python scripts/replication_smoke.py --fast
+
 echo "== benchmark smoke (engines, device densify, pipeline, plan soak) =="
-python -m benchmarks.run --only mapping,compaction --smoke --artifact "$BENCH_DIR"
+python -m benchmarks.run --only mapping,compaction,replication --smoke --artifact "$BENCH_DIR"
 
 echo "== perf trajectory diff (vs benchmarks/trajectory, >20% drop fails) =="
 python scripts/perf_diff.py "$BENCH_DIR" --baseline benchmarks/trajectory

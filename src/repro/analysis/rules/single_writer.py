@@ -31,6 +31,17 @@ Checks (project-wide):
 
 ``__init__`` constructs the state and is exempt alongside ``apply``.
 Reading any of these (``len(coordinator.control_log)``, replay) is free.
+
+**Replication scope (PR 10).**  The distributed control plane
+(:mod:`repro.etl.replication` / :mod:`repro.etl.transport`) splits the
+single writer across processes: the LEADER path owns
+``StateCoordinator.apply``; follower code rebuilds state exclusively
+through ``replay_control_log(..., coordinator=...)``.  Inside those two
+modules this rule therefore also flags ``.apply()`` / ``.apply_update()``
+calls on any coordinator-typed receiver outside the ``LeaderNode`` class
+-- a follower (or transport helper) applying directly would produce
+writes the replicated log never shipped, the cross-process version of
+unlogged history.
 """
 
 from __future__ import annotations
@@ -44,6 +55,11 @@ from ..project import FunctionInfo, Project, as_project, attr_chain
 _LOG_MUTATORS = frozenset({"append", "extend", "insert", "pop", "remove", "clear"})
 _COORD_STATE = frozenset({"_dpm", "_frozen", "_deferred", "control_log"})
 _WRITERS = ("__init__", "apply")
+# replicated control plane: modules where coordinator.apply itself is
+# leader-only (follower code replays; see module docstring)
+_REPLICATED_MODULES = frozenset({"repro.etl.replication", "repro.etl.transport"})
+_APPLY_CALLS = frozenset({"apply", "apply_update"})
+_LEADER_CLASSES = frozenset({"LeaderNode"})
 
 
 def _coordinator_receiver(chain: Optional[str], coord_names: Set[str]) -> bool:
@@ -84,23 +100,41 @@ class SingleWriterControl(Rule):
                 # a private step of apply: every caller chain ends at apply
                 continue
             yield from self._check_fn(project, info)
+            if (
+                info.module.name in _REPLICATED_MODULES
+                and info.cls not in _LEADER_CLASSES
+            ):
+                yield from self._check_replica_apply(info)
+
+    def _check_replica_apply(self, info: FunctionInfo) -> Iterator[Finding]:
+        """Inside the replication modules only LeaderNode may call
+        ``coordinator.apply``; everything else replays."""
+        ctx = info.ctx
+        where = f"{info.cls + '.' if info.cls else ''}{info.name}"
+        coord_names = _bound_coordinators(info)
+        for node in ast.walk(info.node):
+            if not (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in _APPLY_CALLS
+            ):
+                continue
+            if _coordinator_receiver(attr_chain(node.func.value), coord_names):
+                recv = ctx.segment(node.func.value) or "<expr>"
+                yield ctx.finding(
+                    self.id,
+                    node,
+                    f"{recv}.{node.func.attr}() in {where}(): in the "
+                    "replicated control plane only the leader path "
+                    "(LeaderNode) may call StateCoordinator.apply; follower "
+                    "code rebuilds state through replay_control_log(..., "
+                    "coordinator=...) so every write ships on the log",
+                )
 
     def _check_fn(self, project: Project, info: FunctionInfo) -> Iterator[Finding]:
         ctx = info.ctx
         where = f"{info.cls + '.' if info.cls else ''}{info.name}"
-
-        # names bound from StateCoordinator(...) / replay_control_log(...)
-        coord_names: Set[str] = set()
-        if info.cls == "StateCoordinator":
-            coord_names.add("self")
-        for node in ast.walk(info.node):
-            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
-                fchain = attr_chain(node.value.func) or ""
-                tail = fchain.split(".")[-1]
-                if tail in ("StateCoordinator", "replay_control_log", "from_dusb"):
-                    for tgt in node.targets:
-                        if isinstance(tgt, ast.Name):
-                            coord_names.add(tgt.id)
+        coord_names = _bound_coordinators(info)
 
         for node in ast.walk(info.node):
             # coordinator.control_log.append(...) -- any receiver: the
@@ -153,6 +187,23 @@ class SingleWriterControl(Rule):
                     "state has one writer (StateCoordinator.apply); anything "
                     "else is unlogged history that breaks control-log replay",
                 )
+
+
+def _bound_coordinators(info: FunctionInfo) -> Set[str]:
+    """Names bound from StateCoordinator(...) / replay_control_log(...) /
+    from_dusb(...) in this function (plus ``self`` inside the class)."""
+    coord_names: Set[str] = set()
+    if info.cls == "StateCoordinator":
+        coord_names.add("self")
+    for node in ast.walk(info.node):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            fchain = attr_chain(node.value.func) or ""
+            tail = fchain.split(".")[-1]
+            if tail in ("StateCoordinator", "replay_control_log", "from_dusb"):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        coord_names.add(tgt.id)
+    return coord_names
 
 
 def _flat_targets(targets: Sequence[ast.expr]) -> Iterator[ast.expr]:

@@ -20,9 +20,8 @@ the same ``i`` to interoperate.
 
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 __all__ = [
     "Attribute",
@@ -192,7 +191,10 @@ class Registry:
         self.domain = SchemaTree("d")  # extraction schemata  iD
         self.range = SchemaTree("r")  # CDM business entities iR
         self.state: int = 0
-        self._uid_counter = itertools.count(1)
+        # next uid to issue; a plain int (not itertools.count) so snapshots
+        # can serialize the counter and a restored replica keeps issuing the
+        # exact uid sequence the original would have (replay bit-exactness).
+        self._next_uid: int = 1
 
     # -- state protocol ------------------------------------------------------
     def check_state(self, i: int) -> None:
@@ -219,7 +221,9 @@ class Registry:
 
     # -- attribute fabrication ----------------------------------------------
     def new_attribute(self, name: str, equiv: Optional[int] = None) -> Attribute:
-        return Attribute(uid=next(self._uid_counter), name=name, equiv=equiv)
+        uid = self._next_uid
+        self._next_uid += 1
+        return Attribute(uid=uid, name=name, equiv=equiv)
 
     def evolve(
         self,
@@ -267,6 +271,55 @@ class Registry:
     def delete_version(self, tree: SchemaTree, schema_id: int, version: int) -> None:
         tree.delete_version(schema_id, version)
         self.bump_state()
+
+    # -- snapshots (replication seed / follower catch-up) ---------------------
+    def to_dict(self) -> Dict[str, Any]:
+        """Serialize the full registry to plain JSON-able data.
+
+        Both trees are emitted in :meth:`SchemaTree.blocks` order, which is a
+        pure function of tree structure, so :meth:`from_dict` reconstructs an
+        identical structure *and* identical matrix block layout.  ``state``
+        and ``next_uid`` ride along so a restored replica resumes the exact
+        state/uid sequence — required for bit-exact ``control_log`` replay
+        on top of the snapshot.
+        """
+
+        def tree(t: SchemaTree) -> List[Dict[str, Any]]:
+            return [
+                {
+                    "schema_id": sv.schema_id,
+                    "version": sv.version,
+                    "attributes": [[a.uid, a.name, a.equiv] for a in sv.attributes],
+                }
+                for sv in t.blocks()
+            ]
+
+        return {
+            "state": self.state,
+            "next_uid": self._next_uid,
+            "domain": tree(self.domain),
+            "range": tree(self.range),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Registry":
+        """Rebuild a registry from :meth:`to_dict` output (exact round-trip)."""
+        reg = cls()
+        for tree, blocks in ((reg.domain, d["domain"]), (reg.range, d["range"])):
+            for b in blocks:
+                tree.add_version(
+                    SchemaVersion(
+                        schema_id=b["schema_id"],
+                        version=b["version"],
+                        attributes=[
+                            Attribute(uid=u, name=n, equiv=e)
+                            for u, n, e in b["attributes"]
+                        ],
+                    )
+                )
+        reg.state = d["state"]
+        reg._next_uid = d["next_uid"]
+        return reg
 
     # -- matrix axis layout ---------------------------------------------------
     def row_axis(self) -> List[int]:

@@ -110,23 +110,77 @@ class StateCoordinator:
     be disabled".
     """
 
-    def __init__(self, registry: Registry, dpm: Optional[DPM] = None) -> None:
+    def __init__(
+        self,
+        registry: Registry,
+        dpm: Optional[DPM] = None,
+        *,
+        frozen: bool = False,
+        log_base: int = 0,
+    ) -> None:
         self._lock = threading.Lock()
         self.registry = registry
         self._dpm: DPM = dict(dpm or {})
-        self._frozen = False
+        self._frozen = frozen
         self._evict_hooks: List[Any] = []
         # the epoch-ordered single-writer log: every applied control event,
-        # in application order, with the state it produced
+        # in application order, with the state it produced.  ``log_base`` is
+        # the global seq of the first in-memory record: a follower restored
+        # from a (seed snapshot, log offset) pair keeps only the suffix of
+        # the leader's log, so record seqs are ``log_base + local index``.
+        # Deferred events are deliberately NOT restorable: they are volatile
+        # until logged at Thaw (exactly-once covers *applied* control only).
+        self.log_base = log_base
         self.control_log: List[ControlRecord] = []
         # schema changes deferred by apply(..., defer_frozen=True) during an
         # initial-load window; re-admitted in arrival order by Thaw
         self._deferred: List[Any] = []
+        # replication role, set by repro.etl.replication when this
+        # coordinator joins a leader/follower cluster; None = standalone
+        # (which reports as a single-process "leader")
+        self.replication: Optional[Any] = None
 
     # -- snapshots -----------------------------------------------------------
     def snapshot(self) -> SystemState:
         with self._lock:
             return SystemState(i=self.registry.state, dpm=dict(self._dpm))
+
+    # -- replication surface --------------------------------------------------
+    @property
+    def log_offset(self) -> int:
+        """Global seq the next applied record will receive."""
+        return self.log_base + len(self.control_log)
+
+    @property
+    def is_control_writer(self) -> bool:
+        """True unless a replication role marks this coordinator a follower.
+
+        Leaders and standalone coordinators may :meth:`apply`; follower
+        replicas must only advance through
+        :func:`repro.etl.control.replay_control_log` (the
+        ``single-writer-control`` analyzer rule enforces this statically).
+        """
+        role = getattr(self.replication, "role", "leader")
+        return role != "follower"
+
+    def replication_info(self) -> Dict[str, Any]:
+        """The documented replication observability keys.
+
+        ``role``         ``"leader"`` / ``"follower"`` (standalone
+                         coordinators report ``"leader"``)
+        ``term``         the fencing term of the writer this coordinator
+                         follows (0 when standalone)
+        ``log_offset``   global control-log position (base + applied records)
+        ``lag_records``  records the leader has shipped that this replica has
+                         not yet applied (0 for leaders/standalone)
+        """
+        rep = self.replication
+        return {
+            "role": getattr(rep, "role", "leader"),
+            "term": int(getattr(rep, "term", 0)),
+            "log_offset": self.log_offset,
+            "lag_records": int(getattr(rep, "lag_records", 0)),
+        }
 
     # -- cache-eviction fan-out (the Caffeine analogue) ----------------------
     def on_evict(self, hook: Callable[[int], None], *, weak: bool = False) -> None:
@@ -242,7 +296,7 @@ class StateCoordinator:
                 evict = True
             self.control_log.append(
                 ControlRecord(
-                    seq=len(self.control_log),
+                    seq=self.log_base + len(self.control_log),
                     state=self.registry.state,
                     event=event,
                 )

@@ -42,9 +42,16 @@ events), ``dispatches`` / ``events`` / ``mapped`` / ``dead_letter``
 epoch), ``rebuilds`` (plan builds summed over instances),
 ``bytes_resident`` (device-resident plan bytes summed over instances --
 the cluster's total table footprint under the residency policy),
-``per_instance`` (the raw ``engine.info()`` dicts, instance order).  This
-is the supported observability surface for launchers (``serve --etl
---instances N``) and benchmarks.
+``role`` / ``term`` / ``log_offset`` / ``lag_records`` (replication
+surface from :meth:`StateCoordinator.replication_info`: the control-plane
+role -- ``"leader"`` for any unreplicated or leader-bound coordinator,
+``"follower"`` for a replica -- the fencing term, the next control-log
+sequence number, and how many received-but-unapplied records the replica
+is behind by; an unreplicated cluster reports
+``role="leader", term=0, lag_records=0``), ``per_instance`` (the raw
+``engine.info()`` dicts, instance order).  This is the supported
+observability surface for launchers (``serve --etl --instances N``) and
+benchmarks.
 """
 
 from __future__ import annotations
@@ -285,6 +292,9 @@ class Cluster:
             "plan_epoch": max(i.get("plan_epoch", 0) for i in per),
             "rebuilds": sum(i.get("rebuilds", 0) for i in per),
             "bytes_resident": sum(i.get("bytes_resident", 0) for i in per),
+            # replication surface (role/term/log_offset/lag_records); an
+            # unreplicated coordinator reports role="leader", term=0
+            **self.coordinator.replication_info(),
             "per_instance": per,
         }
 

@@ -49,6 +49,18 @@ data, so the replayed registry, state counter and DPM are bit-identical to
 the original's.  Closure-based ``apply_update`` records are opaque and make
 a log non-replayable (:class:`ControlReplayError`), which is why that path
 is deprecated.
+
+**Replayable-only transport contract.**  The replicated control plane
+(:mod:`repro.etl.replication`) ships log records between processes, so only
+``replayable`` events may cross a transport boundary: a follower rebuilds
+state exclusively by re-applying events, and an opaque closure cannot be
+re-applied (or even serialized).  The wire codec
+(:mod:`repro.etl.transport`) therefore rejects non-replayable events --
+``ClosureUpdate`` included -- with a :class:`ControlReplayError` at encode
+time, *before* anything hits the wire, rather than failing with a
+serialization crash on the far side.  Deferred (queued-but-unlogged) events
+are likewise volatile: they never travel, because exactly-once replication
+covers *applied* control only.
 """
 
 from __future__ import annotations
@@ -227,8 +239,10 @@ class PlanPublished(ControlEvent):
 
 def replay_control_log(
     log: "list[ControlRecord]",
-    registry: Registry,
+    registry: Optional[Registry] = None,
     dpm: Optional[DPM] = None,
+    *,
+    coordinator: Optional[StateCoordinator] = None,
 ) -> StateCoordinator:
     """Reconstruct a coordinator by replaying a control log over a seed.
 
@@ -240,11 +254,33 @@ def replay_control_log(
     which is how a fresh METL instance joins a running deployment at the
     current state ``i``.
 
-    Raises :class:`ControlReplayError` on opaque (closure-based) records or
-    on a state mismatch (wrong seed).
+    Passing ``coordinator=`` replays *onto an existing coordinator* instead
+    of building a fresh one -- the follower catch-up path
+    (:mod:`repro.etl.replication`): the replica advances incrementally as
+    log suffixes arrive, and its registered evict hooks fire exactly as the
+    leader's did.  Each record's ``seq`` must then equal the coordinator's
+    current ``log_offset`` (contiguity check: no gaps, no rewinds) -- a
+    coordinator restored from a (seed snapshot, log offset) pair starts
+    accepting records at exactly that offset.
+
+    This is the ONLY sanctioned write path for follower replicas; direct
+    ``StateCoordinator.apply`` calls outside the leader are flagged by the
+    ``single-writer-control`` analyzer rule.
+
+    Raises :class:`ControlReplayError` on opaque (closure-based) records,
+    on a state mismatch (wrong seed), or on a seq gap.
     """
-    coord = StateCoordinator(registry, dpm)
+    if coordinator is None:
+        if registry is None:
+            raise TypeError("replay_control_log needs a registry or coordinator=")
+        coord = StateCoordinator(registry, dpm)
+    else:
+        coord = coordinator
     for rec in log:
+        if rec.seq != coord.log_offset:
+            raise ControlReplayError(
+                f"log gap: record seq {rec.seq} != expected {coord.log_offset}"
+            )
         event = rec.event
         if not getattr(event, "replayable", True):
             raise ControlReplayError(

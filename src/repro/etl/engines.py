@@ -748,6 +748,9 @@ class MappingEngine:
         self.compiled: Optional[CompiledDMM] = None
         self.plan: Any = None
         self.manager = manager
+        # observability binding (set by METLApp): the coordinator whose
+        # replication surface info() reports when the manager carries none
+        self.coordinator: Optional[Any] = None
         self.lease: Optional[PlanEpoch] = None
         self._stats_uid_col: Optional[np.ndarray] = None
 
@@ -800,9 +803,19 @@ class MappingEngine:
     def _manager_info(self) -> Dict[str, Any]:
         """The manager-derived keys every engine's ``info()`` carries."""
         if self.manager is None:
-            return {"plan_epoch": 0, "rebuilds": 0}
-        m = self.manager.info()
-        return {"plan_epoch": m["plan_epoch"], "rebuilds": m["rebuilds"]}
+            m = {"plan_epoch": 0, "rebuilds": 0}
+        else:
+            mi = self.manager.info()
+            m = {"plan_epoch": mi["plan_epoch"], "rebuilds": mi["rebuilds"]}
+        # replication surface: prefer the manager's own coordinator, fall
+        # back to the app-level observability binding; a bare engine with
+        # neither reports "unbound" (explicitly NOT a leader claim)
+        coord = getattr(self.manager, "coordinator", None) or self.coordinator
+        if coord is not None:
+            m.update(coord.replication_info())
+        else:
+            m.update(role="unbound", term=0, log_offset=0, lag_records=0)
+        return m
 
     # -- chunk stages --------------------------------------------------------
     def densify(self, groups: Groups) -> Any:
@@ -848,6 +861,18 @@ class MappingEngine:
                           serve one state ``i``)
           ``rebuilds``    cumulative plan builds through the manager
                           (incremental splices + full rebuilds)
+          ``role``        control-plane role of the bound coordinator:
+                          ``"leader"`` (any unreplicated or leader-bound
+                          coordinator), ``"follower"`` (a replica fed by
+                          :func:`repro.etl.control.replay_control_log`),
+                          or ``"unbound"`` when the engine has no plan
+                          manager at all
+          ``term``        replication fencing term (0 when unreplicated)
+          ``log_offset``  next control-log sequence number the bound
+                          coordinator would append/accept (``log_base``
+                          + applied records)
+          ``lag_records`` received-but-unapplied control records a
+                          follower replica is behind by (0 on leaders)
 
         and, once a plan is compiled (absent while evicted):
 

@@ -92,6 +92,10 @@ class METLApp:
             engine, impl=impl, mesh=mesh, device_densify=device_densify,
             stats=self.stats, manager=plan_manager,
         )
+        # observability binding only: engine.info() reads the replication
+        # surface (role/term/log_offset/lag_records) off this coordinator
+        # when its plan manager carries none of its own
+        self.engine.coordinator = coordinator
         self._seen: collections.OrderedDict = collections.OrderedDict()
         self._dedup_window = dedup_window
         self._snapshot: Optional[SystemState] = None

@@ -340,9 +340,13 @@ class PlanManager:
             self.incremental_rebuilds += 1
         self.last_rebuild_s = lease.rebuild_s
         self.total_rebuild_s += lease.rebuild_s
-        if self.publish:
+        if self.publish and self.coordinator.is_control_writer:
             # the coordinator's single-writer apply logs the publication;
-            # "plan" events bump nothing, so no eviction re-entrancy
+            # "plan" events bump nothing, so no eviction re-entrancy.  On a
+            # follower replica the gate holds the record back: epochs stay
+            # local, the replicated log carries only the LEADER's writes --
+            # a follower-injected record would diverge the replica log
+            # (promotion flips the role and publishing resumes)
             self.coordinator.apply(
                 PlanPublished(
                     epoch=lease.epoch,

@@ -48,6 +48,19 @@ sharded engine on the same mesh) and ``--async-consume``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b --smoke \
         --etl --instances 4
+
+``--replicated`` (with ``--etl --instances N``) runs the same fan-out as a
+**distributed control plane** (:mod:`repro.etl.replication`): an in-process
+leader owns the single-writer coordinator and streams term-fenced control
+records over the socket transport to N-1 follower *processes*, each of
+which rebuilds state via ``replay_control_log`` from the leader's snapshot
+and maps its own deterministic slice of the chunk grid.  Follower rows come
+back as wire-encoded chunk files and merge with the leader's rows in global
+chunk order before tokenization -- the multi-process analogue of the
+Cluster fan-in.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b --smoke \
+        --etl --instances 3 --replicated
 """
 
 from __future__ import annotations
@@ -160,6 +173,104 @@ def _etl_prompts(
     return sink.prompts
 
 
+def _src_path() -> str:
+    """PYTHONPATH for follower subprocesses: the tree this repro package was
+    imported from, plus whatever the parent already had."""
+    import repro
+
+    # repro is a namespace package (no __init__.py): __file__ is None, the
+    # package dir lives in __path__
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    have = os.environ.get("PYTHONPATH", "")
+    return src + (os.pathsep + have if have else "")
+
+
+def _etl_replicated(n_requests: int, vocab: int, max_len: int = 16,
+                    instances: int = 2) -> list:
+    """Leader/follower multi-process METL: the ``--replicated`` path.
+
+    One in-process :class:`~repro.etl.replication.LeaderNode` (slot 0 of the
+    chunk grid) + ``instances - 1`` follower subprocesses (``python -m
+    repro.etl.replication --role follower``) over the socket transport.  A
+    small churn schedule exercises live schema evolution across the
+    replicated control plane; rows merge in global chunk order."""
+    import json
+    import subprocess
+    import sys
+    import tempfile
+
+    from repro.core.state import StateCoordinator
+    from repro.core.synthetic import ScenarioConfig, build_scenario, churn_schedule
+    from repro.etl import EventSource, TokenizerSink
+    from repro.etl.replication import DataPlane, LeaderNode
+    from repro.etl.transport import SocketServer, row_from_wire
+
+    instances = max(2, instances)
+    max_chunks, chunk_size = 4 * instances, 256
+    sc = build_scenario(ScenarioConfig(n_schemas=6, versions_per_schema=3, seed=7))
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    leader = LeaderNode(coord, term=1)
+    churn = churn_schedule(sc.registry, steps=2, first_chunk=2,
+                           every=instances, seed=8)
+    leader.set_schedule({k: [v] for k, v in churn.items()})
+
+    srv = SocketServer(port=0)
+    tmp = tempfile.mkdtemp(prefix="serve-repl-")
+    procs, outs = [], []
+    for slot in range(1, instances):
+        out = os.path.join(tmp, f"follower{slot}.jsonl")
+        outs.append(out)
+        procs.append(subprocess.Popen(
+            [sys.executable, "-m", "repro.etl.replication",
+             "--role", "follower", "--host", "127.0.0.1",
+             "--port", str(srv.port), "--slot", str(slot),
+             "--instances", str(instances),
+             "--max-chunks", str(max_chunks),
+             "--chunk-size", str(chunk_size),
+             "--stream-seed", "7", "--out", out],
+            env={**os.environ, "PYTHONPATH": _src_path()},
+        ))
+    for _ in procs:
+        leader.attach(srv.accept(timeout=60.0), timeout=60.0)
+
+    by_chunk = {}
+    plane = DataPlane(coord, EventSource(sc.registry, seed=7), slot=0,
+                      instances=instances, max_chunks=max_chunks,
+                      chunk_size=chunk_size)
+    leader.run(plane, on_chunk=lambda h, rows: by_chunk.__setitem__(h, rows))
+    leader.finish(end=max_chunks - 1, wait_done=True, timeout=120.0)
+    for p in procs:
+        if p.wait(timeout=120) != 0:
+            raise RuntimeError(f"replicated follower exited {p.returncode}")
+    for out in outs:
+        with open(out) as f:
+            for line in f:
+                d = json.loads(line)
+                by_chunk[d["chunk"]] = [row_from_wire(r) for r in d["rows"]]
+    leader.close()
+    srv.close()
+
+    sink = TokenizerSink(vocab, max_len=max_len, limit=n_requests)
+    for h in sorted(by_chunk):
+        sink.write(by_chunk[h])
+        if sink.full():
+            break
+    if not sink.full():
+        raise RuntimeError(
+            f"replicated ETL produced only {len(sink.prompts)} prompts of "
+            f"{n_requests} over {max_chunks} chunks"
+        )
+    info = leader.coordinator.replication_info()
+    print(
+        f"etl: replicated control plane, 1 leader + {instances - 1} followers "
+        f"(term {info['term']}, log_offset {info['log_offset']}, "
+        f"state i={coord.registry.state}): "
+        f"{sum(len(v) for v in by_chunk.values())} canonical rows over "
+        f"{len(by_chunk)} chunks"
+    )
+    return sink.prompts
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo_1b")
@@ -174,6 +285,12 @@ def main() -> None:
                          "scaled METL instances (a Cluster with one "
                          "coordinator as the single state writer); 0/1 = "
                          "one pipeline")
+    ap.add_argument("--replicated", action="store_true",
+                    help="with --etl --instances N: run the fan-out as a "
+                         "distributed control plane -- an in-process leader "
+                         "streams fenced control records to N-1 follower "
+                         "processes over the socket transport "
+                         "(repro.etl.replication)")
     ap.add_argument("--async-consume", action="store_true",
                     help="with --etl: double-buffered pipeline consume "
                          "(chunk N+1 densifies while chunk N is on device)")
@@ -206,7 +323,16 @@ def main() -> None:
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     sc = ServeConfig(batch=args.batch, cache_len=args.cache_len, max_new=args.max_new)
     server = Server(params, cfg, sc)
-    if args.etl:
+    if args.etl and args.replicated:
+        if args.shards > 1 or args.device_densify or args.async_consume:
+            raise SystemExit(
+                "--replicated composes with --instances only (follower "
+                "processes run the plain fused engine)"
+            )
+        prompts = _etl_replicated(
+            args.requests, cfg.vocab, instances=max(2, args.instances)
+        )
+    elif args.etl:
         prompts = _etl_prompts(
             args.requests, cfg.vocab, shards=args.shards,
             async_consume=args.async_consume, instances=args.instances,

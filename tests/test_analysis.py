@@ -729,6 +729,61 @@ def test_single_writer_open_helper_fires(tmp_path):
     assert "single-writer-control" in _rules_hit(rep)
 
 
+def test_single_writer_replica_apply_fires(tmp_path):
+    # in the replication modules, coordinator.apply outside LeaderNode is a
+    # follower-side write the replicated log never shipped
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/replication.py",
+        "class FollowerNode:\n"
+        "    def catch_up(self, event):\n"
+        "        self.coordinator.apply(event)\n",
+    )
+    assert "single-writer-control" in _rules_hit(rep)
+
+
+def test_single_writer_replica_apply_clean_twins(tmp_path):
+    # clean twin 1: the same call inside LeaderNode (the leader path owns
+    # apply); clean twin 2: follower replay through replay_control_log
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/replication.py",
+        "from repro.etl.control import replay_control_log\n"
+        "class LeaderNode:\n"
+        "    def apply(self, event):\n"
+        "        self.coordinator.apply(event)\n"
+        "class FollowerNode:\n"
+        "    def advance_to(self, due):\n"
+        "        replay_control_log(due, coordinator=self.coordinator)\n",
+    )
+    assert "single-writer-control" not in _rules_hit(rep)
+
+
+def test_single_writer_replica_scope_is_module_bound(tmp_path):
+    # the leader-only apply restriction binds to the replication modules;
+    # ordinary etl code calling coordinator.apply stays clean
+    rep = _run(
+        tmp_path,
+        "src/repro/etl/other.py",
+        "def drive(coordinator, event):\n"
+        "    coordinator.apply(event)\n",
+    )
+    assert "single-writer-control" not in _rules_hit(rep)
+
+
+def test_single_writer_replication_module_is_clean():
+    """The shipped replication/transport modules pass their own rule: only
+    LeaderNode applies, followers replay."""
+    rep = analyze(
+        [
+            str(REPO / "src/repro/etl/replication.py"),
+            str(REPO / "src/repro/etl/transport.py"),
+        ],
+        select=["single-writer-control"],
+    )
+    assert rep.ok, "\n".join(f.render() for f in rep.findings)
+
+
 def test_single_writer_mutation_in_state_copy(tmp_path):
     """ISSUE mutation check: an out-of-apply control_log append added to a
     copy of the real state.py must fire."""

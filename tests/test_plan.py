@@ -582,12 +582,13 @@ class TestPublish:
 # satellite: documented info() key lists match reality
 # ---------------------------------------------------------------------------
 
+REPLICATION_KEYS = {"role", "term", "log_offset", "lag_records"}
 FUSED_ALWAYS = {
     "engine", "impl", "n_shards", "device_densify", "dispatches",
     "transfers", "plan_epoch", "rebuilds",
-}
+} | REPLICATION_KEYS
 BLOCKS_ALWAYS = {"engine", "impl", "n_shards", "dispatches", "plan_epoch",
-                 "rebuilds"}
+                 "rebuilds"} | REPLICATION_KEYS
 PLAN_KEYS = {"state", "n_blocks", "blocks_per_shard", "table_bytes",
              "table_bytes_per_shard", "bytes_resident"}
 FUSED_PLAN_KEYS = PLAN_KEYS | {"width"}
@@ -595,7 +596,7 @@ CLUSTER_KEYS = {
     "instances", "engine", "state", "states", "control_log", "dispatches",
     "events", "mapped", "dead_letter", "plan_epoch", "rebuilds",
     "bytes_resident", "per_instance",
-}
+} | REPLICATION_KEYS
 
 
 def _documented(doc):
@@ -625,6 +626,10 @@ def test_engine_info_keys_match_documented_lists():
         info = eng.info()
         assert set(info) == always | plan_keys, engine
         assert info["plan_epoch"] == 1 and info["rebuilds"] == 1
+        # unreplicated coordinator: the single writer IS the leader
+        assert info["role"] == "leader" and info["term"] == 0
+        assert info["log_offset"] == len(coord.control_log)
+        assert info["lag_records"] == 0
         # default residency: everything hot, the lease prices the full table
         assert info["bytes_resident"] == info["table_bytes"] > 0
         eng.evict()
@@ -652,4 +657,8 @@ def test_cluster_info_keys_match_documented_list():
     assert info["bytes_resident"] == sum(
         i["bytes_resident"] for i in info["per_instance"]
     ) > 0
+    # replication surface: an unreplicated cluster is its own leader
+    assert info["role"] == "leader" and info["term"] == 0
+    assert info["log_offset"] == len(coord.control_log)
+    assert info["lag_records"] == 0
     cl.close()

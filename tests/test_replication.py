@@ -1,0 +1,544 @@
+"""Distributed control plane (PR 10): wire codec, fenced ledger, follower
+catch-up bit-exactness, leader/follower parity against the single-process
+Cluster oracle, election/fencing, and exactly-once restart."""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.state import ClosureUpdate, StateCoordinator
+from repro.core.registry import Registry
+from repro.core.synthetic import ScenarioConfig, build_scenario, churn_schedule
+from repro.etl import CollectSink, Cluster, EventSource
+from repro.etl.control import (
+    ControlReplayError,
+    Freeze,
+    MatrixEdit,
+    PlanPublished,
+    SchemaAdded,
+    SchemaEvolved,
+    Thaw,
+    VersionDeleted,
+    replay_control_log,
+)
+from repro.etl.replication import (
+    ControlLedger,
+    DataPlane,
+    END_OF_STREAM,
+    FencedAppendError,
+    FollowerNode,
+    LeaderNode,
+    elect_leader,
+    load_restart,
+    promote,
+)
+from repro.etl.transport import (
+    decode_event,
+    decode_record,
+    decode_snapshot,
+    encode_event,
+    encode_record,
+    encode_snapshot,
+    local_pipe,
+    row_to_wire,
+)
+
+
+def _scenario(seed=7, n_schemas=4):
+    return build_scenario(
+        ScenarioConfig(n_schemas=n_schemas, versions_per_schema=2, seed=seed)
+    )
+
+
+def _schedule(sc, *, steps=3, first=1, every=2, freeze_at=None, thaw_at=None):
+    churn = churn_schedule(
+        sc.registry, steps=steps, first_chunk=first, every=every, seed=11
+    )
+    sched = {k: [v] for k, v in churn.items()}
+    if freeze_at is not None:
+        sched.setdefault(freeze_at, []).insert(0, Freeze())
+    if thaw_at is not None:
+        sched.setdefault(thaw_at, []).append(Thaw())
+    return sched
+
+
+def _attach_pair(leader):
+    """local_pipe + the blocking attach/subscribe handshake, in-process."""
+    end_l, end_f = local_pipe()
+    t = threading.Thread(target=leader.attach, args=(end_l,))
+    t.start()
+    fol = FollowerNode(end_f, node_id=1 + len(leader.followers))
+    fol.subscribe()
+    t.join()
+    return fol
+
+
+# ------------------------------------------------------------------ codec
+
+
+EVENTS = [
+    SchemaAdded(tree="domain", schema_id=90, names=("a", "b"), version=1),
+    SchemaEvolved(tree="domain", schema_id=0, keep=("x",), add=("y", "z")),
+    VersionDeleted(tree="range", schema_id=1, version=1),
+    MatrixEdit(dpm={(0, 1, 2, 1): frozenset({(5, 7), (6, 8)})}),
+    Freeze(),
+    Thaw(),
+    PlanPublished(epoch=3, state=9, kind="fused", incremental=True,
+                  touched_columns=2, n_blocks=11, bytes_resident=4096,
+                  rebuild_s=0.25),
+]
+
+
+@pytest.mark.parametrize("event", EVENTS, ids=lambda e: type(e).__name__)
+def test_codec_roundtrips_every_event(event):
+    wire = encode_event(event)
+    back = decode_event(json.loads(json.dumps(wire)))  # through real JSON
+    assert type(back) is type(event)
+    if isinstance(event, MatrixEdit):
+        assert back.dpm == event.dpm
+    else:
+        assert back == event
+
+
+def test_codec_rejects_closure_update_at_the_boundary():
+    ev = ClosureUpdate(lambda reg: ("added_domain", 0, 1))
+    with pytest.raises(ControlReplayError):
+        encode_event(ev)
+
+
+def test_registry_snapshot_roundtrip_preserves_uid_sequence():
+    sc = _scenario()
+    reg = Registry.from_dict(sc.registry.to_dict())
+    assert reg.to_dict() == sc.registry.to_dict()
+    # uid continuity: the SAME evolution issues the SAME uids on both
+    keep = tuple(
+        a.name
+        for a in sc.registry.domain.get(
+            0, sc.registry.domain.latest_version(0)
+        ).attributes
+    )[:2]
+    ev = SchemaEvolved(tree="domain", schema_id=0, keep=keep, add=("fresh",))
+    ev.mutate(sc.registry)
+    ev.mutate(reg)
+    assert reg.to_dict() == sc.registry.to_dict()
+
+
+def test_coordinator_snapshot_roundtrip_carries_log_offset():
+    sc = _scenario()
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    coord.apply(SchemaAdded(tree="domain", schema_id=91, names=("n1",)))
+    snap = encode_snapshot(coord)
+    twin = decode_snapshot(json.loads(json.dumps(snap)))
+    assert twin.registry.to_dict() == coord.registry.to_dict()
+    assert twin.snapshot().dpm == coord.snapshot().dpm
+    assert twin.log_offset == coord.log_offset == 1
+
+
+# ----------------------------------------------------------------- ledger
+
+
+def _wire(seq, term, state=1):
+    rec_coord = StateCoordinator(Registry())
+    rec_coord.apply(SchemaAdded(tree="domain", schema_id=50 + seq, names=("a",)))
+    w = encode_record(rec_coord.control_log[0], term=term, at=0)
+    w["seq"], w["state"] = seq, state
+    return w
+
+
+def test_ledger_fences_stale_term_appends():
+    led = ControlLedger()
+    led.open_term(2)
+    with pytest.raises(FencedAppendError):
+        led.commit(_wire(0, term=1))
+    led.commit(_wire(0, term=2))
+    # a zombie writer from term 1 stays fenced even mid-log
+    with pytest.raises(FencedAppendError):
+        led.commit(_wire(1, term=1))
+    with pytest.raises(FencedAppendError):
+        led.open_term(2)  # non-advancing term is itself stale
+
+
+def test_ledger_rejects_seq_gaps_and_truncates(tmp_path):
+    path = str(tmp_path / "ledger.jsonl")
+    led = ControlLedger(path=path)
+    led.open_term(1)
+    led.commit(_wire(0, term=1))
+    with pytest.raises(FencedAppendError):
+        led.commit(_wire(2, term=1))
+    led.commit(_wire(1, term=1))
+    assert led.offset == 2
+    led.truncate(1)
+    assert led.offset == 1
+    again = ControlLedger.load(path)
+    assert again.offset == 1 and again.term == 1
+
+
+# ------------------------------------------------ follower-side fencing
+
+
+def test_follower_drops_stale_term_records():
+    sc = _scenario()
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    leader = LeaderNode(coord, term=3)
+    fol = _attach_pair(leader)
+    assert fol.term == 3
+    fol._dispatch({"t": "rec", **_wire(0, term=2)})
+    assert fol.rejected_stale == 1 and fol.lag_records == 0
+    fol._dispatch({"t": "hb", "term": 1, "frontier": 99, "log_offset": 0})
+    assert fol.rejected_stale == 2 and fol.frontier < 99
+
+
+# ----------------------------------------- catch-up bit-exactness (c)
+
+
+def _apply_history(leader):
+    """Schema churn + a Freeze/Thaw window with deferred churn inside +
+    PlanPublished cutovers, through the leader's replicated apply."""
+    reg = leader.coordinator.registry
+    keep0 = tuple(
+        a.name for a in reg.domain.get(0, reg.domain.latest_version(0)).attributes
+    )[:3]
+    leader.apply(SchemaEvolved(tree="domain", schema_id=0, keep=keep0, add=("c0",)))
+    leader.apply(PlanPublished(epoch=1, state=reg.state, kind="fused"))
+    leader.apply(Freeze())
+    # deferred inside the window: queued, unlogged, re-admitted by Thaw
+    keep1 = tuple(
+        a.name for a in reg.domain.get(1, reg.domain.latest_version(1)).attributes
+    )[:2]
+    leader.apply(
+        SchemaEvolved(tree="domain", schema_id=1, keep=keep1, add=("c1",)),
+        defer_frozen=True,
+    )
+    leader.apply(PlanPublished(epoch=2, state=reg.state, kind="fused"))
+    leader.apply(Thaw())
+    leader.apply(PlanPublished(epoch=3, state=reg.state, kind="fused"))
+
+
+def test_catch_up_from_offset_matches_full_replay():
+    sc = _scenario(seed=13)
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    leader = LeaderNode(coord, term=1)
+    _apply_history(leader)
+
+    # snapshot mid-history at a nonzero offset, then more history
+    mid = coord.log_offset
+    snap = encode_snapshot(coord)
+    reg = coord.registry
+    keep2 = tuple(
+        a.name for a in reg.domain.get(2, reg.domain.latest_version(2)).attributes
+    )[:2]
+    leader.apply(SchemaEvolved(tree="domain", schema_id=2, keep=keep2, add=("c2",)))
+    leader.apply(PlanPublished(epoch=4, state=reg.state, kind="fused"))
+    assert mid > 0 and coord.log_offset > mid
+
+    # catch-up: seed snapshot + suffix replay from the nonzero offset
+    partial = decode_snapshot(json.loads(json.dumps(snap)))
+    assert partial.log_offset == mid
+    suffix = [
+        decode_record(json.loads(json.dumps(w)))["record"]
+        for w in leader.ledger.records(frm=mid)
+    ]
+    replay_control_log(suffix, coordinator=partial)
+
+    # oracle: full replay over the deterministic seed
+    sc2 = _scenario(seed=13)
+    full = replay_control_log(
+        [decode_record(w)["record"] for w in leader.ledger.records()],
+        sc2.registry,
+        sc2.dpm,
+    )
+
+    for twin in (partial, full):
+        assert twin.registry.to_dict() == coord.registry.to_dict()
+        assert twin.snapshot().dpm == coord.snapshot().dpm
+        assert twin.log_offset == coord.log_offset
+    # the deferred-evolution record only exists PAST the Thaw record
+    ops = [w["event"]["type"] for w in leader.ledger.records()]
+    assert ops.index("Thaw") < ops.index("SchemaEvolved", ops.index("Freeze"))
+
+
+def test_replay_contiguity_rejects_gaps():
+    sc = _scenario()
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    leader = LeaderNode(coord, term=1)
+    _apply_history(leader)
+    records = [decode_record(w)["record"] for w in leader.ledger.records()]
+    partial = decode_snapshot(encode_snapshot(StateCoordinator(
+        _scenario().registry, _scenario().dpm
+    )))
+    with pytest.raises(ControlReplayError, match="gap"):
+        replay_control_log(records[1:], coordinator=partial)
+
+
+# ------------------------------- leader + 2 followers vs Cluster oracle
+
+
+def _rows_wire(rows):
+    return [row_to_wire(r) for r in rows]
+
+
+def test_leader_two_followers_match_cluster_oracle():
+    n, max_chunks, chunk_size = 3, 9, 48
+    sc = _scenario(seed=21, n_schemas=5)
+    sched = _schedule(sc, steps=3, first=2, every=2, freeze_at=3, thaw_at=6)
+
+    # oracle: the single-process lockstep Cluster over the same grid
+    osc = _scenario(seed=21, n_schemas=5)
+    ocoord = StateCoordinator(osc.registry, osc.dpm)
+    osink = CollectSink()
+    cl = Cluster.over_stream(
+        ocoord, EventSource(osc.registry, seed=5), instances=n,
+        chunk_size=chunk_size, max_chunks=max_chunks,
+        control=_schedule(osc, steps=3, first=2, every=2, freeze_at=3, thaw_at=6),
+        sinks=[osink],
+    )
+    cl.run()
+
+    # replicated: leader on slot 0, followers on slots 1/2, same grid
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    leader = LeaderNode(coord, term=1)
+    leader.set_schedule(sched)
+    f1 = _attach_pair(leader)
+    f2 = _attach_pair(leader)
+
+    by_chunk = {}
+
+    def keep(h, rows):
+        by_chunk[h] = rows
+
+    leader.run(
+        DataPlane(coord, EventSource(sc.registry, seed=5), slot=0, instances=n,
+                  chunk_size=chunk_size, max_chunks=max_chunks),
+        on_chunk=keep,
+    )
+    leader.finish(end=max_chunks - 1)
+    for slot, fol in ((1, f1), (2, f2)):
+        fol.run(
+            DataPlane(fol.coordinator, EventSource(fol.coordinator.registry, seed=5),
+                      slot=slot, instances=n, chunk_size=chunk_size,
+                      max_chunks=max_chunks),
+            on_chunk=keep,
+        )
+        fol.finish()
+        assert fol.coordinator.registry.to_dict() == coord.registry.to_dict()
+
+    merged = [r for h in sorted(by_chunk) for r in by_chunk[h]]
+    assert sorted(by_chunk) == list(range(max_chunks))
+    assert ocoord.registry.state == coord.registry.state
+    assert len(merged) == len(osink.rows)
+    assert _rows_wire(merged) == _rows_wire(osink.rows)
+
+
+# -------------------------------------------- election / promotion
+
+
+def test_election_prefers_longest_log_and_promote_fences_the_zombie():
+    sc = _scenario(seed=31)
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    leader = LeaderNode(coord, term=1)
+    f1 = _attach_pair(leader)
+    f2 = _attach_pair(leader)
+    # f2's link dies silently before the history tail ships: only f1 sees it
+    leader.followers = leader.followers[:1]
+    _apply_history(leader)
+    f1.pump()
+    f2.pump()
+    assert f1.coordinator.log_offset + f1.lag_records > (
+        f2.coordinator.log_offset + f2.lag_records
+    )
+
+    assert elect_leader([f1, f2]) is f1
+    new = promote(f1, term=2)
+    # promotion replayed the pending suffix first
+    assert new.coordinator.registry.to_dict() == coord.registry.to_dict()
+    assert new.term == 2 and new.coordinator.log_offset == coord.log_offset
+
+    # the zombie's stale term can no longer append to the new ledger
+    stale = encode_record(coord.control_log[-1], term=1, at=0)
+    stale["seq"] = new.ledger.offset
+    with pytest.raises(FencedAppendError):
+        new.ledger.commit(stale)
+    # and a promotion that does not advance the term is itself fenced
+    with pytest.raises(FencedAppendError):
+        promote(f2, term=1)
+
+
+def test_promoted_leader_reseeds_late_joiners():
+    sc = _scenario(seed=33)
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    leader = LeaderNode(coord, term=1)
+    f1 = _attach_pair(leader)
+    _apply_history(leader)
+    f1.pump()
+    new = promote(f1, term=2)
+    cold = _attach_pair(new)
+    assert cold.term == 2
+    cold.advance_to(END_OF_STREAM)
+    assert cold.coordinator.registry.to_dict() == coord.registry.to_dict()
+
+
+# ------------------------------------------- exactly-once restart
+
+
+def test_exactly_once_restart_zero_dropped_zero_duplicated(tmp_path):
+    n, max_chunks, chunk_size = 2, 8, 48
+    ledger_path = str(tmp_path / "ledger.jsonl")
+    ck_path = str(tmp_path / "restart.json")
+
+    def mk(seed=41):
+        sc = _scenario(seed=seed, n_schemas=5)
+        return sc, _schedule(sc, steps=3, first=1, every=2)
+
+    # oracle: one uninterrupted leader over the full grid
+    osc, osched = mk()
+    ocoord = StateCoordinator(osc.registry, osc.dpm)
+    oracle = LeaderNode(ocoord, term=1)
+    oracle.set_schedule(osched)
+    orows = {}
+    oracle.run(
+        DataPlane(ocoord, EventSource(osc.registry, seed=6), slot=0,
+                  instances=1, chunk_size=chunk_size, max_chunks=max_chunks),
+        on_chunk=lambda h, rows: orows.__setitem__(h, rows),
+    )
+    oracle.finish(end=max_chunks - 1)
+
+    # crashing leader: checkpoint every chunk, die after chunk 3's emit
+    sc, sched = mk()
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    leader = LeaderNode(
+        coord, term=1, ledger=ControlLedger(path=ledger_path),
+        checkpoint_path=ck_path,
+    )
+    leader.set_schedule(sched)
+    got = {}
+
+    class Crash(RuntimeError):
+        pass
+
+    def until_crash(h, rows):
+        got[h] = rows
+        if len(got) == 3:
+            raise Crash()  # dies AFTER emitting, BEFORE that checkpoint
+
+    with pytest.raises(Crash):
+        leader.run(
+            DataPlane(coord, EventSource(sc.registry, seed=6), slot=0,
+                      instances=1, chunk_size=chunk_size, max_chunks=max_chunks),
+            on_chunk=until_crash, checkpoint_every=1,
+        )
+
+    # chunk 3 was emitted but never checkpointed: exactly-once discards it
+    ck = load_restart(ck_path)
+    assert ck["chunks_done"] == 2
+    got = {h: got[h] for h in sorted(got)[: ck["chunks_done"]]}
+
+    # restart: truncate the ledger to the checkpoint, replay over the
+    # deterministic seed, resume the source at the checkpointed offset
+    sc2, sched2 = mk()
+    ledger = ControlLedger.load(ledger_path)
+    ledger.truncate(int(ck["log_offset"]))
+    coord2 = replay_control_log(
+        [decode_record(w)["record"] for w in ledger.records()],
+        sc2.registry, sc2.dpm,
+    )
+    leader2 = LeaderNode(
+        coord2, term=int(ck["term"]) + 1, ledger=ledger, checkpoint_path=ck_path
+    )
+    leader2.set_schedule(sched2, applied_to=int(ck["source_offset"]) - 1)
+    leader2.run(
+        DataPlane(coord2, EventSource(sc2.registry, seed=6), slot=0,
+                  instances=1, chunk_size=chunk_size, max_chunks=max_chunks,
+                  skip_chunks=int(ck["chunks_done"])),
+        on_chunk=lambda h, rows: got.__setitem__(h, rows),
+    )
+    leader2.finish(end=max_chunks - 1)
+
+    assert sorted(got) == sorted(orows) == list(range(max_chunks))
+    for h in orows:  # zero dropped, zero duplicated, bit-identical rows
+        assert _rows_wire(got[h]) == _rows_wire(orows[h]), f"chunk {h}"
+    assert coord2.registry.to_dict() == ocoord.registry.to_dict()
+    assert leader2.term == 2
+
+
+def test_follower_dedups_reshipped_records_across_restart():
+    sc = _scenario(seed=43)
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    leader = LeaderNode(coord, term=1)
+    fol = _attach_pair(leader)
+    _apply_history(leader)
+    fol.pump()
+    held = fol.coordinator.log_offset + fol.lag_records
+
+    # a restarted leader (same history, new term) re-ships its whole log
+    for wire in leader.ledger.records():
+        fol._dispatch({"t": "rec", **dict(wire, term=2)})
+    assert fol.coordinator.log_offset + fol.lag_records == held  # no dupes
+    fol.advance_to(END_OF_STREAM)
+    assert fol.coordinator.registry.to_dict() == coord.registry.to_dict()
+
+
+# ------------------------------------------------ info() contract (f)
+
+
+def test_replication_info_roles_and_lag():
+    sc = _scenario(seed=51)
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    assert coord.replication_info() == {
+        "role": "leader", "term": 0, "log_offset": 0, "lag_records": 0,
+    }
+    leader = LeaderNode(coord, term=4)
+    info = coord.replication_info()
+    assert info["role"] == "leader" and info["term"] == 4
+    assert coord.is_control_writer
+
+    fol = _attach_pair(leader)
+    _apply_history(leader)
+    fol.pump()
+    finfo = fol.coordinator.replication_info()
+    assert finfo["role"] == "follower" and finfo["term"] == 4
+    assert finfo["lag_records"] == fol.lag_records > 0
+    assert finfo["log_offset"] == 0  # nothing applied until the cursor moves
+    assert not fol.coordinator.is_control_writer
+    fol.advance_to(END_OF_STREAM)
+    assert fol.coordinator.replication_info()["lag_records"] == 0
+    assert fol.coordinator.replication_info()["log_offset"] == coord.log_offset
+
+
+def test_follower_engine_info_reports_follower_role():
+    sc = _scenario(seed=53)
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    leader = LeaderNode(coord, term=1)
+    fol = _attach_pair(leader)
+    plane = DataPlane(
+        fol.coordinator, EventSource(fol.coordinator.registry, seed=5),
+        slot=0, instances=1, chunk_size=32, max_chunks=1,
+    )
+    leader.advance(0)
+    fol.pump()
+    fol.advance_to(0)
+    assert plane.step() is not None
+    info = plane.app.engine.info()
+    assert info["role"] == "follower" and info["term"] == 1
+    assert info["lag_records"] == 0
+
+
+def test_follower_plan_manager_never_publishes_to_the_replica_log():
+    """A follower-bound PlanManager with publish=True keeps epochs local:
+    is_control_writer gates the PlanPublished injection."""
+    from repro.etl.plan import PlanManager
+
+    sc = _scenario(seed=55)
+    coord = StateCoordinator(sc.registry, sc.dpm)
+    leader = LeaderNode(coord, term=1)
+    fol = _attach_pair(leader)
+    mgr = PlanManager(kind="fused", coordinator=fol.coordinator, publish=True)
+    snap = fol.coordinator.snapshot()
+    lease = mgr.acquire(snap, fol.coordinator.registry)
+    assert lease.epoch == 1
+    # the epoch is live locally, but NO PlanPublished entered the replica log
+    assert fol.coordinator.log_offset == coord.log_offset
+    assert [type(r.event).__name__ for r in fol.coordinator.control_log] == [
+        type(r.event).__name__ for r in coord.control_log
+    ]
